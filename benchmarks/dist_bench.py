@@ -1,0 +1,105 @@
+"""Distributed SpGEMM benchmarks (Figs 5/6/7) — run as a SUBPROCESS with
+forced host devices (the parent benchmark keeps 1 device).
+
+    python benchmarks/dist_bench.py evolution   # Fig 5/6: 2D vs 3D vs merge
+    python benchmarks/dist_bench.py scaling     # Fig 7: collective bytes vs p
+"""
+import os
+import sys
+
+N_DEV = int(os.environ.get("REPRO_DEVICES", "16"))
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N_DEV}"
+
+import time                                                    # noqa: E402
+import numpy as np                                             # noqa: E402
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (ARITHMETIC, DistSpMat, DistSpMat3D, make_grid,      # noqa: E402
+                        spgemm_2d, spgemm_3d)
+from repro.io import rmat_coo                                  # noqa: E402
+from repro.launch.roofline import collective_bytes             # noqa: E402
+
+
+def _time(fn, *args, reps=2):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def evolution(scale=11):
+    """Fig 5/6 analogue: SpGEMM variants on the same matrix, same devices."""
+    shape, r, c, v = rmat_coo(scale, 8, seed=2)
+    mesh = make_grid(4, 4)
+    A = DistSpMat.from_global_coo(shape, r, c, v, (4, 4), mesh=mesh,
+                                  random_permute=True)
+    pc, oc = 1 << 17, 1 << 16
+    rows = []
+    for variant, merge in [("allgather", "deferred"),
+                           ("rotation", "deferred"),
+                           ("rotation", "incremental")]:
+        fn = jax.jit(lambda a, b, vr=variant, mg=merge: spgemm_2d(
+            a, b, ARITHMETIC, mesh=mesh, prod_cap=pc, out_cap=oc,
+            variant=vr, merge=mg))
+        t = _time(fn, A, A)
+        coll = collective_bytes(fn.lower(A, A).compile().as_text())
+        rows.append((f"spgemm2d_{variant}_{merge}", t,
+                     f"collbytes={coll['total']:.0f}"))
+    # 3D CA on (4, 2, 2)
+    mesh3 = make_grid(2, 2, layers=4)
+    A3 = DistSpMat3D.from_global_coo(shape, r, c, v, (4, 2, 2), "acol",
+                                     mesh=mesh3, random_permute=True)
+    B3 = DistSpMat3D.from_global_coo(shape, r, c, v, (4, 2, 2), "brow",
+                                     mesh=mesh3, random_permute=True)
+    fn3 = jax.jit(lambda a, b: spgemm_3d(a, b, ARITHMETIC, mesh=mesh3,
+                                         prod_cap=pc, out_cap=oc))
+    t3 = _time(fn3, A3, B3)
+    coll3 = collective_bytes(fn3.lower(A3, B3).compile().as_text())
+    rows.append(("spgemm3d_ca_L4", t3, f"collbytes={coll3['total']:.0f}"))
+    return rows
+
+
+def scaling():
+    """Fig 7 analogue (AOT): per-device collective bytes, 2D vs 3D, p↑."""
+    rows = []
+    shape, r, c, v = rmat_coo(10, 8, seed=3)
+    for q, L in [(2, 1), (4, 1), (2, 4)]:
+        p = q * q * L
+        if p > N_DEV:
+            continue
+        pc, oc = 1 << 16, 1 << 15
+        if L == 1:
+            mesh = make_grid(q, q)
+            A = DistSpMat.from_global_coo(shape, r, c, v, (q, q), mesh=mesh,
+                                          random_permute=True)
+            fn = jax.jit(lambda a, b: spgemm_2d(
+                a, b, ARITHMETIC, mesh=mesh, prod_cap=pc, out_cap=oc))
+            coll = collective_bytes(fn.lower(A, A).compile().as_text())
+            rows.append((f"ca_scaling_2d_p{p}", 0.0,
+                         f"collbytes={coll['total']:.0f}"))
+        else:
+            mesh = make_grid(q, q, layers=L)
+            A3 = DistSpMat3D.from_global_coo(shape, r, c, v, (L, q, q),
+                                             "acol", mesh=mesh,
+                                             random_permute=True)
+            B3 = DistSpMat3D.from_global_coo(shape, r, c, v, (L, q, q),
+                                             "brow", mesh=mesh,
+                                             random_permute=True)
+            fn = jax.jit(lambda a, b: spgemm_3d(
+                a, b, ARITHMETIC, mesh=mesh, prod_cap=pc, out_cap=oc))
+            coll = collective_bytes(fn.lower(A3, B3).compile().as_text())
+            rows.append((f"ca_scaling_3d_L{L}_p{p}", 0.0,
+                         f"collbytes={coll['total']:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "evolution"
+    rows = evolution() if which == "evolution" else scaling()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

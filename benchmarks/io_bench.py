@@ -1,0 +1,51 @@
+"""Table 5 reproduction: parallel I/O times — ASCII (MatrixMarket) vs
+binary, 1..8 readers/writers; plus the label-format two-pass reader.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.io import (read_binary, read_generalized_tuples, read_mm_parallel,
+                      rmat_coo, write_binary, write_mm_parallel)
+
+
+def run(quick=True):
+    rows = []
+    scale = 13 if quick else 16
+    shape, r, c, v = rmat_coo(scale, 8, seed=6)
+    with tempfile.TemporaryDirectory() as td:
+        mtx = os.path.join(td, "g.mtx")
+        binp = os.path.join(td, "g.cbb")
+        lbl = os.path.join(td, "g.lbl")
+        t0 = time.perf_counter()
+        write_mm_parallel(mtx, shape, r, c, v, nwriters=4)
+        rows.append(("io_write_ascii_w4", (time.perf_counter() - t0) * 1e6,
+                     f"nnz={len(r)}"))
+        t0 = time.perf_counter()
+        write_binary(binp, shape, r, c, v.astype(np.float64), nwriters=4)
+        rows.append(("io_write_binary_w4", (time.perf_counter() - t0) * 1e6,
+                     f"bytes={os.path.getsize(binp)}"))
+        for nr in (1, 2, 4, 8):
+            t0 = time.perf_counter()
+            read_mm_parallel(mtx, nreaders=nr)
+            rows.append((f"io_read_ascii_r{nr}",
+                         (time.perf_counter() - t0) * 1e6, ""))
+        for nr in (1, 4):
+            t0 = time.perf_counter()
+            read_binary(binp, nreaders=nr)
+            rows.append((f"io_read_binary_r{nr}",
+                         (time.perf_counter() - t0) * 1e6, ""))
+        # label format (ReadGeneralizedTuples) on string labels
+        ns = min(len(r), 100_000)
+        with open(lbl, "w") as f:
+            for i in range(ns):
+                f.write(f"prot{r[i]}\tprot{c[i]}\t{v[i]:.3f}\n")
+        t0 = time.perf_counter()
+        shape2, *_ = read_generalized_tuples(lbl, nworkers=4)
+        rows.append(("io_read_label_w4", (time.perf_counter() - t0) * 1e6,
+                     f"nvert={shape2[0]}"))
+    return rows

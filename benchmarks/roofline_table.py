@@ -1,0 +1,77 @@
+"""Aggregate dry-run JSONs into the §Roofline markdown table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load_all(pattern="dryrun_*.json"):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            d = json.load(f)
+        m = d["meta"]
+        key = (m["arch"], m["shape"], "mp" if m["multi_pod"] else "sp",
+               os.path.basename(path))
+        out[key] = d
+    return out
+
+
+def fmt_s(x):
+    return f"{x:.3e}" if x < 1e-2 else f"{x:.3f}"
+
+
+def table(markdown=True, mesh="sp", only_baseline=True):
+    rows = []
+    for (arch, shape, m, fname), d in load_all().items():
+        if m != mesh:
+            continue
+        # baseline files are exactly dryrun_<arch>_<shape>_<sp|mp>.json;
+        # anything longer is a §Perf variant (plan override or tag)
+        is_baseline = fname == f"dryrun_{arch}_{shape}_{m}.json"
+        if only_baseline and not is_baseline:
+            continue
+        t = d["terms_seconds"]
+        mem = d.get("memory_per_device", {})
+        fits = mem.get("total_transient", 0) + mem.get("args", 0)
+        rows.append([
+            arch, shape,
+            fmt_s(t["compute"]), fmt_s(t["memory"]), fmt_s(t["collective"]),
+            d["dominant"],
+            f"{d['model_flops_global']:.2e}",
+            f"{d['useful_flops_ratio']:.3f}" if d["useful_flops_ratio"]
+            else "-",
+            f"{d['roofline_fraction'] * 100:.2f}%" if d["roofline_fraction"]
+            else "-",
+            f"{fits / 2**30:.1f}",
+        ])
+    rows.sort()
+    header = ["arch", "shape", "T_comp(s)", "T_mem(s)", "T_coll(s)",
+              "bound", "MODEL_FLOPS", "useful", "roofline%", "GiB/dev"]
+    if not markdown:
+        return [header] + rows
+    out = ["| " + " | ".join(header) + " |",
+           "|" + "---|" * len(header)]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+def run(quick=True):
+    """Benchmark-driver entry: one row per dry-run cell found."""
+    del quick
+    rows = []
+    for (arch, shape, m, fname), d in load_all().items():
+        variant = fname[len(f"dryrun_{arch}_{shape}_{m}"):-len(".json")]
+        tag = f"roofline_{arch}_{shape}_{m}" + \
+            (f"[{variant.strip('_')}]" if variant else "")
+        rows.append((tag, d["step_time_lower_bound_s"] * 1e6,
+                     f"dom={d['dominant']};frac={d['roofline_fraction']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,111 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Distributed benchmarks run in
+subprocesses with forced host devices; everything else runs on the single
+real device. ``--full`` widens the sweeps.
+
+  spmspv_sweep    Fig 3   SpMSpV/SpMV variant selection vs sparsity
+  spgemm_local    §4.1    hash↔dense vs heap↔ESC crossover
+  dist(evolution) Fig 5/6 2D SUMMA variants vs 3D CA (time + coll bytes)
+  dist(scaling)   Fig 7   CA collective bytes vs p (AOT)
+  apps            Fig 8/9/10  FastSV / HipMCL breakdown / PageRank / BFS
+  io              Table 5 ASCII vs binary vs label-format parallel I/O
+  kernels         §5      kernel-path microbenches (oracle timings)
+  roofline        §Roofline  aggregated dry-run cells (if present)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def run_dist(which: str, devices: int = 16):
+    env = dict(os.environ, REPRO_DEVICES=str(devices))
+    env.pop("XLA_FLAGS", None)
+    script = os.path.join(os.path.dirname(__file__), "dist_bench.py")
+    proc = subprocess.run([sys.executable, script, which],
+                          capture_output=True, text=True, env=env,
+                          timeout=1200)
+    if proc.returncode != 0:
+        print(f"dist_bench_{which},0.0,FAILED", flush=True)
+        sys.stderr.write(proc.stderr[-2000:])
+        return
+    print(proc.stdout.strip())
+
+
+def kernels_bench(quick=True):
+    import time
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    rows = []
+    rng = np.random.default_rng(0)
+
+    def t(fn, *args, reps=3):
+        jfn = jax.jit(fn)
+        jax.block_until_ready(jfn(*args))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = jfn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    for kind in ("plus_times", "min_plus", "max_min"):
+        rows.append((f"kernel_semiring_{kind}_ref256",
+                     t(lambda x, y, k=kind: ref.semiring_matmul(x, y, k),
+                       a, a), "oracle-on-CPU"))
+    B, S, H, d = 1, 512, 4, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, d)), jnp.float32)
+    rows.append(("kernel_flash_attn_ref512",
+                 t(lambda x: ref.flash_attention(x, x, x, True), q),
+                 "oracle-on-CPU"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benches")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    if want("spmspv"):
+        from benchmarks import spmspv_sweep
+        emit(spmspv_sweep.run(quick=quick))
+    if want("spgemm_local"):
+        from benchmarks import spgemm_local
+        emit(spgemm_local.run(quick=quick))
+    if want("dist"):
+        run_dist("evolution")
+        run_dist("scaling")
+    if want("apps"):
+        from benchmarks import apps_bench
+        emit(apps_bench.run(quick=quick))
+    if want("io"):
+        from benchmarks import io_bench
+        emit(io_bench.run(quick=quick))
+    if want("kernels"):
+        emit(kernels_bench(quick=quick))
+    if want("roofline"):
+        from benchmarks import roofline_table
+        emit(roofline_table.run(quick=quick))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Fig 3 reproduction: best SpMSpV/SpMV variant vs matrix/vector sparsity.
+
+R-MAT matrix (Graph500 params), sweep average nnz/column × vector density,
+time each local variant, report the winner per cell (the paper's rule of
+thumb: sort ≲0.5% < bucket ≲10% < SPA; SpMSpV competitive with SpMV even
+at 50% density).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ARITHMETIC
+from repro.core.coo import COO
+from repro.core.spmv_local import (SPMSPV_VARIANTS, spmv_row,
+                                   spvec_from_dense)
+from repro.io import rmat_coo
+
+
+def _time(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))          # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6     # us
+
+
+def run(scale=12, quick=True):
+    rows = []
+    n = 1 << scale
+    edge_factors = [4, 16] if quick else [2, 4, 8, 16, 32]
+    densities = [0.001, 0.02, 0.3] if quick else \
+        [0.0005, 0.002, 0.01, 0.05, 0.2, 0.5]
+    for ef in edge_factors:
+        shape, r, c, v = rmat_coo(scale, ef, seed=1)
+        cap = len(r) + 8
+        A = COO.from_entries(shape, r, c, v, cap=cap).sort("col")
+        rng = np.random.default_rng(0)
+        for dens in densities:
+            f = max(1, int(dens * n))
+            xd = np.zeros(n, np.float32)
+            xd[rng.choice(n, f, replace=False)] = 1.0
+            xi, xv, xn = spvec_from_dense(jnp.asarray(xd), cap=f + 8)
+            prod_cap = int(ef * f * 8 + 1024)
+            out_cap = min(n, prod_cap)
+            best, best_t = None, np.inf
+            for name, fn in SPMSPV_VARIANTS.items():
+                jfn = jax.jit(lambda a, i, vv, nn, fn=fn: fn(
+                    a, i, vv, nn, ARITHMETIC, prod_cap=prod_cap,
+                    out_cap=out_cap))
+                t = _time(jfn, A, xi, xv, xn)
+                rows.append((f"spmspv_{name}_ef{ef}_d{dens}", t, ""))
+                if t < best_t:
+                    best, best_t = name, t
+            jmv = jax.jit(lambda a, x: spmv_row(a, x, ARITHMETIC))
+            t = _time(jmv, A, jnp.asarray(xd))
+            rows.append((f"spmv_row_ef{ef}_d{dens}", t, ""))
+            winner = best if best_t < t else "spmv"
+            rows.append((f"fig3_best_ef{ef}_d{dens}", min(best_t, t),
+                         winner))
+    return rows

@@ -1,0 +1,83 @@
+"""Maximal cardinality matching on bipartite graphs (paper §3.3, [22]).
+
+Simplified Azad-Buluç iteration over CombBLAS primitives:
+  repeat until no augmenting edges:
+    1. every unmatched row proposes to one adjacent unmatched column
+       (SpMV with (max, select-col-id): h[c] = max row id proposing to c)
+    2.每 column accepts one proposer; accepted pairs update mateRow/mateCol
+       (piece-aligned vector updates + one distributed assign)
+
+The paper replicates the mate vectors along process rows/columns to avoid
+fine-grained traffic; here the same effect comes from the all_gather inside
+the SpMV (the column block of the mate vector is materialized per process
+column — an explicit, bulk-synchronous replication).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..core import DistSpMat, DistVec
+from ..core.assign import assign
+from ..core.semiring import MAX_INT, Semiring
+from ..core.spmv import spmv_iter, transpose_layout
+
+_NONE = -1
+MAXSEL = Semiring(MAX_INT, lambda a, b: b, "max_select2nd_i32")
+
+
+def maximal_matching(a: DistSpMat, *, mesh: Mesh, max_iters: int = 64):
+    """Greedy maximal matching. a: (nr × nc) bipartite adjacency.
+
+    Returns (mate_row[nr], mate_col[nc]) with -1 = unmatched. The matching
+    is maximal on the support of a (no edge joins two unmatched vertices).
+    """
+    nr, nc = a.shape
+    grid = a.grid
+    pr, pc = grid
+    npad_r = a.mb * pr
+    npad_c = a.nb * pc
+    mate_row = DistVec.from_global(np.full(npad_r, _NONE, np.int32), grid,
+                                   layout="col", mesh=mesh)
+    mate_col = DistVec.from_global(np.full(npad_c, _NONE, np.int32), grid,
+                                   layout="col", mesh=mesh)
+    vb_r = mate_row.vb
+    # global row id of each vector slot (for proposals)
+    ids_r = DistVec.from_global(np.arange(npad_r, dtype=np.int32), grid,
+                                layout="col", mesh=mesh)
+    rcap = max(npad_r, npad_c, 64)
+
+    from ..core.assign import extract
+    from ..core.matops import mat_transpose
+    from ..core.coo import SENTINEL
+    at = mat_transpose(a, mesh=mesh)
+    ids_c = DistVec.from_global(np.arange(npad_c, dtype=np.int32), grid,
+                                layout="col", mesh=mesh)
+    for it in range(max_iters):
+        # 1. unmatched rows broadcast their id; matched rows send -1
+        prop = DistVec(jnp.where(mate_row.data == _NONE, ids_r.data, _NONE),
+                       nr, grid, "col")
+        # h[c] = max proposing row over N(c):  y = A^T prop via (max, 2nd)
+        h = spmv_iter(at, prop, MAXSEL, mesh=mesh)       # layout 'col', len nc
+        # 2. columns accept: unmatched columns with a valid proposer
+        accept = (mate_col.data == _NONE) & (h.data > _NONE) & \
+            (h.data < jnp.int32(2**31 - 1))
+        changed = int(jnp.sum(accept))
+        if changed == 0:
+            break
+        # 3. accepted rows pick ONE column (max col id wins the assign merge)
+        upd_idx = jnp.where(accept, h.data, SENTINEL)
+        upd_val = jnp.where(accept, ids_c.data, _NONE)
+        mate_row, ok = assign(mate_row, upd_idx, upd_val, mesh=mesh,
+                              add=MAX_INT, route_cap=rcap)
+        assert bool(jnp.all(ok))
+        # 4. verification: column c keeps row r only if mate_row[r] == c
+        #    (two columns may have accepted the same proposer)
+        got, ok2 = extract(mate_row, upd_idx, mesh=mesh, route_cap=rcap)
+        assert bool(jnp.all(ok2))
+        confirmed = accept & (got == ids_c.data)
+        mate_col = DistVec(jnp.where(confirmed, h.data, mate_col.data),
+                           nc, grid, "col")
+    return (mate_row.to_global()[:nr].astype(np.int64),
+            mate_col.to_global()[:nc].astype(np.int64))

@@ -1,0 +1,3 @@
+"""repro.configs — assigned architectures (``--arch <id>``) + shape cells."""
+from .registry import (ARCHS, SHAPES, get_config, get_smoke, valid_cells,
+                       cell_step_kind)

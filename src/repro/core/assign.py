@@ -1,0 +1,217 @@
+"""Distributed vector assign / extract (paper §3.3, VecAssign in Table 1).
+
+Irregular vector updates are the latency-bound tail of graph algorithms
+(Awerbuch-Shiloach / FastSV). CombBLAS 2.0's schemes, adapted to SPMD:
+
+ - **Two-stage hierarchical all-to-all**: entries are routed first along the
+   'row' axis (to the destination process row), then along 'col'. Each stage
+   is an all-to-all on a √p-sized communicator — the paper's "collective
+   communication on reduced communicators", which is also exactly how the
+   multi-pod LM stack's hierarchical collectives work (DESIGN.md §5).
+ - **Skew-aware path** (``skew_aware=True``): per-destination counts are
+   summed grid-wide; destinations above ``heavy_frac`` of total traffic are
+   served via an all-gather (broadcast-like: every device sees heavy
+   entries, owners filter), while the light remainder rides the bounded
+   all-to-all — the paper's 90%-heavy-process separation, expressed in SPMD.
+
+All updates use GLOBAL int32 indices (the vector length must fit 32 bits on
+device; CombBLAS's 64-bit global indices are a host-side concern in this
+port — see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .coo import SENTINEL
+from .dist import DistVec, specs_of
+from .semiring import Monoid, segment_reduce
+
+Array = jax.Array
+
+
+def _bucketize(dest: Array, payloads: tuple[Array, ...], nb: int, cap_b: int,
+               fills):
+    """Radix-place entries into nb buckets of cap_b slots each.
+
+    dest >= nb marks invalid entries. Returns (bucketed_payloads, ok).
+    """
+    n = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    d_s = dest[order]
+    seg = jnp.searchsorted(d_s, jnp.arange(nb + 1)).astype(jnp.int32)
+    counts = seg[1:] - seg[:-1]
+    ok = jnp.all(counts <= cap_b)
+    within = jnp.arange(n, dtype=jnp.int32) - seg[jnp.clip(d_s, 0, nb - 1)]
+    keep = (d_s < nb) & (within < cap_b)
+    slot = jnp.where(keep, d_s * cap_b + jnp.minimum(within, cap_b - 1),
+                     nb * cap_b)  # OOB -> dropped
+    outs = []
+    for p, fill in zip(payloads, fills):
+        buf = jnp.full((nb * cap_b,) + p.shape[1:], fill, p.dtype)
+        outs.append(buf.at[slot].set(p[order], mode="drop"))
+    return tuple(outs), ok
+
+
+def _a2a(x: Array, axis: str, nb: int) -> Array:
+    return jax.lax.all_to_all(x.reshape((nb, -1) + x.shape[1:]), axis, 0, 0) \
+        .reshape((x.shape[0],) + x.shape[1:])
+
+
+def route_to_pieces(gidx: Array, payloads: tuple[Array, ...], fills,
+                    *, n: int, grid, cap: int):
+    """Route (global_idx, payload) entries to the owning piece (layout 'col').
+
+    Call inside shard_map. Returns (local_idx, payloads, ok): entries now on
+    their owner device, indices localized to the piece, SENTINEL padding.
+    """
+    pr, pc = grid
+    vb = -(-n // (pr * pc))
+    valid = gidx != SENTINEL
+    piece = jnp.where(valid, gidx // vb, pr * pc)
+    dest_i = jnp.where(valid, piece % pr, pr)            # layout 'col'
+    dest_j = jnp.where(valid, piece // pr, pc)
+    # stage 1: along 'row' to the destination process row
+    (g1, dj1, *p1), ok1 = _bucketize(
+        dest_i, (gidx, dest_j) + tuple(payloads), pr, cap // pr,
+        (SENTINEL, pc) + tuple(fills))
+    g1 = _a2a(g1, "row", pr)
+    dj1 = _a2a(dj1, "row", pr)
+    p1 = [_a2a(x, "row", pr) for x in p1]
+    # stage 2: along 'col' to the destination process column
+    valid1 = g1 != SENTINEL
+    dj1 = jnp.where(valid1, dj1, pc)
+    (g2, *p2), ok2 = _bucketize(dj1, (g1,) + tuple(p1), pc, cap // pc,
+                                (SENTINEL,) + tuple(fills))
+    g2 = _a2a(g2, "col", pc)
+    p2 = [_a2a(x, "col", pc) for x in p2]
+    lidx = jnp.where(g2 != SENTINEL, g2 % vb, SENTINEL)
+    return lidx, tuple(p2), ok1 & ok2
+
+
+def assign(v: DistVec, gidx: Array, val: Array, *, mesh: Mesh,
+           route_cap: int | None = None, add: Monoid | None = None,
+           accumulate: bool = False, skew_aware: bool = False,
+           heavy_frac: float = 0.5):
+    """v[gidx] = val (distributed scatter). Returns (DistVec, ok).
+
+    gidx/val: (pr, pc, cap) per-device update lists, global indices,
+    SENTINEL-padded. ``add`` merges duplicate updates (None = overwrite;
+    duplicate targets then take an arbitrary writer, as in CombBLAS's
+    non-deterministic assign). ``accumulate=True`` additionally combines
+    the merged update with the existing value (v[i] = add(v[i], upd)).
+    """
+    assert v.layout == "col"
+    pr, pc = v.grid
+    cap = gidx.shape[-1]
+    route_cap = route_cap or max(cap * 2, 64)
+    route_cap = -(-route_cap // (pr * pc)) * pr * pc   # divisible by pr, pc
+    vb = v.vb
+    n = v.n
+
+    def body(data, gi, gv):
+        gi = gi.reshape(-1)
+        gv = gv.reshape((-1,) + gv.shape[3:])
+        mine_extra = None
+        if skew_aware:
+            # grid-wide per-piece traffic census (cheap: p counts/device)
+            piece = jnp.where(gi != SENTINEL, gi // vb, pr * pc)
+            counts = jax.ops.segment_sum(jnp.ones_like(piece), piece,
+                                         pr * pc + 1)[:pr * pc]
+            total = jax.lax.psum(counts, ("row", "col"))
+            heavy = total.astype(jnp.float32) > \
+                heavy_frac * jnp.maximum(jnp.sum(total), 1).astype(jnp.float32)
+            is_heavy = heavy[jnp.clip(piece, 0, pr * pc - 1)] & \
+                (gi != SENTINEL)
+            # heavy entries: broadcast to all, owners filter
+            hg = jnp.where(is_heavy, gi, SENTINEL)
+            hv = gv
+            hg_all = jax.lax.all_gather(hg, ("row", "col"), tiled=True)
+            hv_all = jax.lax.all_gather(hv, ("row", "col"), tiled=True)
+            i = jax.lax.axis_index("row")
+            j = jax.lax.axis_index("col")
+            my_piece = j * pr + i
+            mine = (hg_all != SENTINEL) & (hg_all // vb == my_piece)
+            mine_extra = (jnp.where(mine, hg_all % vb, SENTINEL), hv_all)
+            gi = jnp.where(is_heavy, SENTINEL, gi)       # light path only
+        lidx, (lval,), ok = route_to_pieces(
+            gi, (gv,), (jnp.asarray(0, gv.dtype),),
+            n=n, grid=(pr, pc), cap=route_cap)
+        d = data.reshape((-1,) + data.shape[3:])
+        if mine_extra is not None:
+            lidx = jnp.concatenate([lidx, mine_extra[0]])
+            lval = jnp.concatenate([lval, mine_extra[1]])
+        if add is None:
+            d = d.at[jnp.where(lidx != SENTINEL, lidx, d.shape[0])] \
+                .set(lval, mode="drop")
+        else:
+            # duplicates merged under the monoid, then REPLACE (CombBLAS
+            # assign semantics) or accumulate into the existing value
+            ids = jnp.where(lidx != SENTINEL, lidx, d.shape[0])
+            upd = segment_reduce(lval, ids, d.shape[0], add)
+            touched = jax.ops.segment_sum(
+                jnp.ones_like(ids), ids, d.shape[0] + 1)[:d.shape[0]] > 0
+            d = jnp.where(touched, add.op(d, upd) if accumulate else upd, d)
+        return d[None, None], ok[None, None]
+
+    out, ok = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P("row", "col", None), P("row", "col", None),
+                  P("row", "col", None)),
+        out_specs=(P("row", "col", None), P("row", "col")))(v.data, gidx, val)
+    return DistVec(out, v.n, v.grid, v.layout), ok
+
+
+def extract(v: DistVec, gidx: Array, *, mesh: Mesh,
+            route_cap: int | None = None):
+    """w[s] = v[gidx[s]] (distributed gather). Returns (vals, ok).
+
+    gidx: (pr, pc, cap) request lists (global indices, SENTINEL padding);
+    result vals aligned with gidx slots. Requests are routed to owners with
+    provenance (src rank + slot), answered, and routed back — 4 all-to-alls
+    on √p communicators.
+    """
+    assert v.layout == "col"
+    pr, pc = v.grid
+    cap = gidx.shape[-1]
+    route_cap = route_cap or max(cap * 2, 64)
+    route_cap = -(-route_cap // (pr * pc)) * pr * pc   # divisible by pr, pc
+    n, vb = v.n, v.vb
+
+    def body(data, gi):
+        gi = gi.reshape(-1)
+        d = data.reshape(-1)
+        i = jax.lax.axis_index("row")
+        j = jax.lax.axis_index("col")
+        src = (i * pc + j).astype(jnp.int32)
+        slots = jnp.arange(cap, dtype=jnp.int32)
+        lidx, (src_r, slot_r), ok1 = route_to_pieces(
+            gi, (jnp.full((cap,), src), slots),
+            (jnp.int32(pr * pc), jnp.int32(cap)),
+            n=n, grid=(pr, pc), cap=route_cap)
+        ans = d[jnp.clip(lidx, 0, vb - 1)]
+        # route answers back: destination = src rank (row-major i*pc+j)
+        valid = lidx != SENTINEL
+        back_i = jnp.where(valid, src_r // pc, pr)
+        back_j = jnp.where(valid, src_r % pc, pc)
+        (s1, bj1, a1), okb1 = _bucketize(
+            back_i, (slot_r, back_j, ans), pr, route_cap // pr,
+            (jnp.int32(cap), jnp.int32(pc), jnp.asarray(0, ans.dtype)))
+        s1 = _a2a(s1, "row", pr)
+        bj1 = _a2a(bj1, "row", pr)
+        a1 = _a2a(a1, "row", pr)
+        bj1 = jnp.where(s1 != cap, bj1, pc)
+        (s2, a2), okb2 = _bucketize(bj1, (s1, a1), pc, route_cap // pc,
+                                    (jnp.int32(cap), jnp.asarray(0, ans.dtype)))
+        s2 = _a2a(s2, "col", pc)
+        a2 = _a2a(a2, "col", pc)
+        out = jnp.zeros((cap,), ans.dtype)
+        out = out.at[jnp.where(s2 != cap, s2, cap)].set(a2, mode="drop")
+        return out[None, None], (ok1 & okb1 & okb2)[None, None]
+
+    vals, ok = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P("row", "col", None), P("row", "col", None)),
+        out_specs=(P("row", "col", None), P("row", "col")))(v.data, gidx)
+    return vals, ok

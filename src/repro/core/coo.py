@@ -1,0 +1,305 @@
+"""Capacity-padded local sparse matrix (CombBLAS local SpMat analogue).
+
+JAX/XLA requires static shapes, so a local sparse tile is stored as fixed
+*capacity* arrays with an explicit nonzero count:
+
+    COO(row[i32 cap], col[i32 cap], val[cap, *vdims], nnz[i32 scalar])
+
+Canonical padding: entries at positions >= nnz hold ``row = col = SENTINEL``
+and ``val = fill`` (the caller's semiring zero). SENTINEL sorts *after* all
+real indices, so sorted tiles stay sorted under padding, and JAX scatter's
+``mode='drop'`` discards padded writes for free.
+
+Hypersparsity (paper §1, DCSC): tiles from 512-way decompositions have
+nnz ≪ n. We therefore never materialize O(n) column pointers; column ranges
+are found by binary search over the sorted ``col`` array
+(``column_range``) — an O(nnz)-storage DCSC analogue.
+
+Values may be vector-valued (``val.shape == (cap, *vdims)``) to support the
+paper's "neighborhood aggregation on vector-valued data" use case.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .semiring import Monoid, Semiring, segment_reduce
+
+Array = jax.Array
+SENTINEL = np.int32(2**31 - 1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class COO:
+    row: Array
+    col: Array
+    val: Array
+    nnz: Array                       # int32 scalar, actual entry count
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    order: str = dataclasses.field(default="none", metadata=dict(static=True))
+    # order in {'none', 'row' (row-major: sorted by (row, col)),
+    #           'col' (col-major: sorted by (col, row))}
+
+    @property
+    def cap(self) -> int:
+        return self.row.shape[0]
+
+    @property
+    def vdims(self) -> tuple[int, ...]:
+        return tuple(self.val.shape[1:])
+
+    @property
+    def dtype(self):
+        return self.val.dtype
+
+    def mask(self) -> Array:
+        return jnp.arange(self.cap, dtype=jnp.int32) < self.nnz
+
+    # ------------------------------------------------------------------
+    # constructors
+    # ------------------------------------------------------------------
+    @staticmethod
+    def empty(shape, cap, dtype=jnp.float32, vdims=(), fill=0, order="row") -> "COO":
+        return COO(
+            row=jnp.full((cap,), SENTINEL, jnp.int32),
+            col=jnp.full((cap,), SENTINEL, jnp.int32),
+            val=jnp.full((cap,) + tuple(vdims), fill, dtype),
+            nnz=jnp.zeros((), jnp.int32),
+            shape=tuple(shape), order=order)
+
+    @staticmethod
+    def from_entries(shape, row, col, val, cap=None, nnz=None, fill=0,
+                     order="none") -> "COO":
+        """Build from (possibly unpadded) entry arrays; pads to ``cap``."""
+        row = jnp.asarray(row, jnp.int32)
+        col = jnp.asarray(col, jnp.int32)
+        val = jnp.asarray(val)
+        n = row.shape[0]
+        cap = int(cap if cap is not None else n)
+        nnz = jnp.asarray(n if nnz is None else nnz, jnp.int32)
+        pad = cap - n
+        if pad < 0:
+            raise ValueError(f"cap {cap} < entries {n}")
+        if pad:
+            row = jnp.concatenate([row, jnp.full((pad,), SENTINEL, jnp.int32)])
+            col = jnp.concatenate([col, jnp.full((pad,), SENTINEL, jnp.int32)])
+            val = jnp.concatenate(
+                [val, jnp.full((pad,) + tuple(val.shape[1:]), fill, val.dtype)])
+        return COO(row, col, val, nnz, tuple(shape), order).canonicalize(fill)
+
+    @staticmethod
+    def from_dense(dense: Array, cap: int, zero=0, order="row") -> "COO":
+        m, n = dense.shape[:2]
+        vdims = dense.shape[2:]
+        if vdims:
+            present = jnp.any(dense != zero, axis=tuple(range(2, dense.ndim)))
+        else:
+            present = dense != zero
+        r, c = jnp.nonzero(present, size=cap, fill_value=SENTINEL)
+        nnz = jnp.minimum(jnp.sum(present), cap).astype(jnp.int32)
+        v = dense[jnp.clip(r, 0, m - 1), jnp.clip(c, 0, n - 1)]
+        v = jnp.where((r != SENTINEL).reshape((-1,) + (1,) * len(vdims)),
+                      v, jnp.asarray(zero, dense.dtype))
+        return COO(r.astype(jnp.int32), c.astype(jnp.int32), v, nnz,
+                   (int(m), int(n)), order)
+
+    # ------------------------------------------------------------------
+    # canonicalization / sorting / dedup
+    # ------------------------------------------------------------------
+    def canonicalize(self, fill=0) -> "COO":
+        """Force padding entries to the canonical (SENTINEL, SENTINEL, fill)."""
+        m = self.mask()
+        vm = m.reshape((-1,) + (1,) * len(self.vdims))
+        return COO(jnp.where(m, self.row, SENTINEL),
+                   jnp.where(m, self.col, SENTINEL),
+                   jnp.where(vm, self.val, jnp.asarray(fill, self.val.dtype)),
+                   self.nnz, self.shape, self.order)
+
+    def sort(self, order: str = "row") -> "COO":
+        """Lexicographic sort by (row, col) ['row'] or (col, row) ['col'].
+
+        Uses jax.lax.sort with two integer keys — no index arithmetic, so no
+        int32 overflow for any tile size (the paper's 32/64-bit split).
+        """
+        if self.order == order:
+            return self
+        k1, k2 = (self.row, self.col) if order == "row" else (self.col, self.row)
+        vflat = self.val.reshape(self.cap, -1)
+        ops = [k1, k2] + [vflat[:, i] for i in range(vflat.shape[1])]
+        out = jax.lax.sort(ops, num_keys=2, is_stable=True)
+        val = jnp.stack(out[2:], axis=1).reshape(self.val.shape) \
+            if vflat.shape[1] else self.val
+        row, col = (out[0], out[1]) if order == "row" else (out[1], out[0])
+        return COO(row, col, val, self.nnz, self.shape, order)
+
+    def dedup(self, add: Monoid, order: str = "row") -> "COO":
+        """Merge duplicate (row, col) entries with the add monoid."""
+        s = self.sort(order)
+        k1, k2 = (s.row, s.col) if order == "row" else (s.col, s.row)
+        prev1 = jnp.concatenate([jnp.full((1,), -1, jnp.int32), k1[:-1]])
+        prev2 = jnp.concatenate([jnp.full((1,), -1, jnp.int32), k2[:-1]])
+        # an entry is live if within nnz AND not a SENTINEL placeholder; the
+        # latter makes dedup robust to inputs whose padding is interleaved
+        # (concatenated stage buffers) with a conservative nnz
+        live = s.mask() & (s.row != SENTINEL) & (s.col != SENTINEL)
+        newgrp = ((k1 != prev1) | (k2 != prev2)) & live
+        gid = jnp.cumsum(newgrp.astype(jnp.int32)) - 1          # [-1 .. ngrp)
+        ngrp = jnp.maximum(jnp.max(jnp.where(live, gid, -1)) + 1, 0)
+        gid = jnp.where(live, gid, self.cap)                    # pad -> drop
+        vals = segment_reduce(s.val, gid, self.cap, add, sorted_ids=True)
+        # representative index for each group = min position in the group
+        first_of_grp = segment_reduce(jnp.arange(self.cap, dtype=jnp.int32),
+                                      gid, self.cap,
+                                      Monoid(jnp.minimum, 2**31 - 1, "min"),
+                                      sorted_ids=True)
+        idx = jnp.clip(first_of_grp, 0, self.cap - 1)
+        valid = jnp.arange(self.cap, dtype=jnp.int32) < ngrp
+        row = jnp.where(valid, s.row[idx], SENTINEL)
+        col = jnp.where(valid, s.col[idx], SENTINEL)
+        vm = valid.reshape((-1,) + (1,) * len(self.vdims))
+        val = jnp.where(vm, vals, jnp.asarray(add.identity, vals.dtype))
+        return COO(row, col, val, ngrp.astype(jnp.int32), self.shape, order)
+
+    # ------------------------------------------------------------------
+    # conversions / elementwise
+    # ------------------------------------------------------------------
+    def to_dense(self, zero=0) -> Array:
+        m, n = self.shape
+        out = jnp.full((m, n) + self.vdims, zero, self.val.dtype)
+        return out.at[self.row, self.col].set(self.val, mode="drop")
+
+    def to_dense_add(self, add: Monoid) -> Array:
+        """Dense with duplicate merging (for non-canonical tiles)."""
+        m, n = self.shape
+        out = jnp.full((m, n) + self.vdims, add.identity, self.val.dtype)
+        if add.tag == "sum":
+            return out.at[self.row, self.col].add(self.val, mode="drop")
+        if add.tag == "min":
+            return out.at[self.row, self.col].min(self.val, mode="drop")
+        if add.tag == "max":
+            return out.at[self.row, self.col].max(self.val, mode="drop")
+        d = self.dedup(add)
+        return d.to_dense(add.identity)
+
+    def transpose(self) -> "COO":
+        return COO(self.col, self.row, self.val, self.nnz,
+                   (self.shape[1], self.shape[0]), "none")
+
+    def apply(self, fn) -> "COO":
+        """Elementwise apply on stored values (GraphBLAS apply)."""
+        return dataclasses.replace(self, val=jnp.where(
+            self.mask().reshape((-1,) + (1,) * len(self.vdims)),
+            fn(self.val), self.val))
+
+    def prune(self, keep_fn, fill=0) -> "COO":
+        """Drop stored entries where ``keep_fn(val)`` is False (GraphBLAS select)."""
+        keep = keep_fn(self.val) & self.mask()
+        order = jnp.argsort(~keep)  # kept entries first, stable
+        row = jnp.where(keep[order], self.row[order], SENTINEL)
+        col = jnp.where(keep[order], self.col[order], SENTINEL)
+        km = keep[order].reshape((-1,) + (1,) * len(self.vdims))
+        val = jnp.where(km, self.val[order], jnp.asarray(fill, self.val.dtype))
+        return COO(row, col, val, jnp.sum(keep).astype(jnp.int32),
+                   self.shape, "none")
+
+    def reduce(self, axis: int, add: Monoid) -> Array:
+        """Row (axis=1) or column (axis=0) reduction to a dense vector."""
+        ids = self.row if axis == 1 else self.col
+        n_out = self.shape[0] if axis == 1 else self.shape[1]
+        ids = jnp.where(self.mask(), ids, n_out)
+        return segment_reduce(self.val, ids, n_out, add)
+
+    def scale_rows(self, d: Array, mul=jnp.multiply) -> "COO":
+        vm = self.mask().reshape((-1,) + (1,) * len(self.vdims))
+        newv = mul(self.val, d[jnp.clip(self.row, 0, self.shape[0] - 1)])
+        return dataclasses.replace(self, val=jnp.where(vm, newv, self.val))
+
+    def scale_cols(self, d: Array, mul=jnp.multiply) -> "COO":
+        vm = self.mask().reshape((-1,) + (1,) * len(self.vdims))
+        newv = mul(self.val, d[jnp.clip(self.col, 0, self.shape[1] - 1)])
+        return dataclasses.replace(self, val=jnp.where(vm, newv, self.val))
+
+    def with_cap(self, cap: int, fill=0) -> "COO":
+        """Grow (or shrink, keeping first entries) capacity."""
+        if cap == self.cap:
+            return self
+        if cap > self.cap:
+            pad = cap - self.cap
+            return COO(
+                jnp.concatenate([self.row, jnp.full((pad,), SENTINEL, jnp.int32)]),
+                jnp.concatenate([self.col, jnp.full((pad,), SENTINEL, jnp.int32)]),
+                jnp.concatenate([self.val,
+                                 jnp.full((pad,) + self.vdims, fill, self.val.dtype)]),
+                self.nnz, self.shape, self.order)
+        return COO(self.row[:cap], self.col[:cap], self.val[:cap],
+                   jnp.minimum(self.nnz, cap), self.shape, self.order)
+
+
+def column_range(sorted_cols: Array, k: Array):
+    """(start, end) of column ``k`` in a col-major-sorted index array.
+
+    O(log cap) per query, O(nnz) storage — the DCSC analogue (no O(n)
+    pointer array). ``k`` may be an array of queries.
+    """
+    start = jnp.searchsorted(sorted_cols, k, side="left").astype(jnp.int32)
+    end = jnp.searchsorted(sorted_cols, k, side="right").astype(jnp.int32)
+    return start, end
+
+
+def row_range(sorted_rows: Array, i: Array):
+    start = jnp.searchsorted(sorted_rows, i, side="left").astype(jnp.int32)
+    end = jnp.searchsorted(sorted_rows, i, side="right").astype(jnp.int32)
+    return start, end
+
+
+def ewise_union(a: COO, b: COO, add: Monoid, cap: int | None = None) -> COO:
+    """C = A ⊕ B (entries present in either; add where both)."""
+    assert a.shape == b.shape
+    cap = cap or (a.cap + b.cap)
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    row = jnp.concatenate([a.row, b.row])
+    col = jnp.concatenate([a.col, b.col])
+    val = jnp.concatenate([a.val.astype(out_dtype), b.val.astype(out_dtype)])
+    nnz = a.nnz + b.nnz
+    # NB: valid entries are not contiguous after concat; dedup's sort pushes
+    # SENTINEL padding to the end, making ``nnz`` + mask() consistent again.
+    both = COO(row, col, val, nnz, a.shape, "none")
+    return both.dedup(add).with_cap(cap, add.identity)
+
+
+def ewise_intersect(a: COO, b: COO, mul, out_cap: int | None = None,
+                    zero=0) -> COO:
+    """C = A ⊗ B on the intersection pattern (A .* B)."""
+    assert a.shape == b.shape
+    sa, sb = a.sort("row"), b.sort("row")
+    # mark a-entries that also appear in b: binary search b's (row,col)
+    out_cap = out_cap or min(a.cap, b.cap)
+    # Pair keys are encoded in 32 bits — the CombBLAS "local indices are
+    # 32-bit" contract. Local tiles (post 2D/3D decomposition) satisfy this.
+    m, n = a.shape
+    if (m + 1) * (n + 1) >= 2**31:
+        raise ValueError("local tile exceeds 32-bit key space; "
+                         "increase the process grid (paper §1, local indices)")
+    ka = sa.row * jnp.int32(n + 1) + jnp.minimum(sa.col, n)
+    kb = sb.row * jnp.int32(n + 1) + jnp.minimum(sb.col, n)
+    ka = jnp.where(sa.mask(), ka, jnp.int32(2**31 - 1))
+    kb = jnp.where(sb.mask(), kb, jnp.int32(2**31 - 1))
+    pos = jnp.searchsorted(kb, ka)
+    posc = jnp.clip(pos, 0, b.cap - 1)
+    hit = (kb[posc] == ka) & sa.mask() & (posc < sb.nnz)
+    val = mul(sa.val, sb.val[posc])
+    out = COO(jnp.where(hit, sa.row, SENTINEL),
+              jnp.where(hit, sa.col, SENTINEL),
+              jnp.where(hit.reshape((-1,) + (1,) * len(val.shape[1:])),
+                        val, jnp.asarray(zero, val.dtype)),
+              jnp.sum(hit).astype(jnp.int32), a.shape, "none")
+    # compact kept entries to the front
+    order = jnp.argsort(~hit)
+    out = COO(out.row[order], out.col[order],
+              out.val[order], out.nnz, out.shape, "none")
+    return out.with_cap(out_cap, zero)

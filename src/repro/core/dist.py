@@ -1,0 +1,534 @@
+"""Distributed sparse/dense containers (SpParMat / FullyDist[Sp]Vec analogues).
+
+Data model (DESIGN.md §3): a distributed object stores each field as ONE
+jax.Array whose leading dims are the process-grid dims, sharded so each
+device owns exactly its tile:
+
+  DistSpMat  : row/col/val/nnz with shapes (pr, pc, cap …), P('row','col')
+  DistSpMat3D: (L, pr, pc, cap …), P('layer','row','col')
+  DistVec    : (pr, pc, vb), P('row','col')  — CombBLAS's superimposed 2D
+               vector distribution, NO replication (paper §2.2): piece
+               (i, j) holds global block k*vb .. (k+1)*vb where the linear
+               piece id k depends on the layout:
+                 layout='col': k = j*pr + i  (block j of the matrix column
+                                dimension is owned collectively by process
+                                column j — what SpMV input needs)
+                 layout='row': k = i*pc + j  (block i owned by process row
+                                i — what reduce-scattered SpMV output is)
+  DistSpVec  : sparse pieces (pr, pc, cap) idx/val/nnz, same piece layout.
+
+Index discipline (paper §1, two index types): global indices are int64 and
+live ONLY on the host (numpy) during assembly/extraction; device-resident
+indices are tile-local int32.
+
+Load balance (paper §2.3/§6): ``random_permute=True`` at assembly applies a
+seeded random row+column permutation — CombBLAS's standard trick, also the
+free side effect of ReadGeneralizedTuples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .coo import COO, SENTINEL
+
+Array = jax.Array
+
+
+def _ceil(a, b):
+    return -(-a // b)
+
+
+def make_grid(pr: int, pc: int, layers: int = 1,
+              devices=None) -> Mesh:
+    """Process grid for sparse ops: ('row','col') or ('layer','row','col')."""
+    devices = devices if devices is not None else jax.devices()
+    n = layers * pr * pc
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    auto = (jax.sharding.AxisType.Auto,)
+    if layers == 1:
+        return jax.make_mesh((pr, pc), ("row", "col"), devices=devices[:n],
+                             axis_types=auto * 2)
+    return jax.make_mesh((layers, pr, pc), ("layer", "row", "col"),
+                         devices=devices[:n], axis_types=auto * 3)
+
+
+# --------------------------------------------------------------------------
+# 2D distributed sparse matrix
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DistSpMat:
+    """2D-distributed sparse matrix on a (pr, pc) grid.
+
+    Tile (i, j) covers global rows [i*mb, (i+1)*mb) × cols [j*nb, (j+1)*nb)
+    with mb = vbm*pc and nb = vbn*pr (padded so the superimposed vector
+    pieces align — see DistVec).
+    """
+
+    row: Array   # (pr, pc, cap) int32, tile-local row index
+    col: Array   # (pr, pc, cap) int32, tile-local col index
+    val: Array   # (pr, pc, cap, *vdims)
+    nnz: Array   # (pr, pc) int32
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    grid: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def pr(self):
+        return self.grid[0]
+
+    @property
+    def pc(self):
+        return self.grid[1]
+
+    @property
+    def cap(self):
+        return self.row.shape[-1]
+
+    @property
+    def mb(self):
+        return _ceil(self.shape[0], self.pr * self.pc) * self.pc
+
+    @property
+    def nb(self):
+        return _ceil(self.shape[1], self.pr * self.pc) * self.pr
+
+    @property
+    def total_nnz(self):
+        return jnp.sum(self.nnz)
+
+    def tile(self, squeeze3=True) -> COO:
+        """Local COO view — call inside shard_map only."""
+        r = self.row.reshape(self.cap)
+        c = self.col.reshape(self.cap)
+        v = self.val.reshape((self.cap,) + self.val.shape[3:])
+        n = self.nnz.reshape(())
+        return COO(r, c, v, n, (self.mb, self.nb), "none")
+
+    # ---------------- host-side assembly / extraction ----------------
+    @staticmethod
+    def from_global_coo(shape, rows, cols, vals, grid, *, mesh: Mesh = None,
+                        cap: int | None = None, pad: float = 1.25,
+                        random_permute: bool = False, seed: int = 0,
+                        vdims=()):
+        """Assemble from global int64 COO (host-side numpy)."""
+        M, N = shape
+        pr, pc = grid
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        vals = np.asarray(vals)
+        if random_permute:
+            rng = np.random.default_rng(seed)
+            rp = rng.permutation(M).astype(np.int64)
+            cp = rp if M == N else rng.permutation(N).astype(np.int64)
+            rows, cols = rp[rows], cp[cols]
+        mb = _ceil(M, pr * pc) * pc
+        nb = _ceil(N, pr * pc) * pr
+        ti, tj = rows // mb, cols // nb
+        lr = (rows % mb).astype(np.int32)
+        lc = (cols % nb).astype(np.int32)
+        tid = ti * pc + tj
+        order = np.lexsort((lc, lr, tid))
+        tid, lr, lc, vals_s = tid[order], lr[order], lc[order], vals[order]
+        counts = np.bincount(tid, minlength=pr * pc)
+        if cap is None:
+            cap = max(8, int(math.ceil(counts.max() * pad / 8) * 8)) \
+                if len(rows) else 8
+        if counts.max() > cap:
+            raise ValueError(f"tile overflow: max nnz {counts.max()} > cap {cap}")
+        starts = np.zeros(pr * pc, np.int64)
+        starts[1:] = np.cumsum(counts)[:-1]
+        R = np.full((pr * pc, cap), SENTINEL, np.int32)
+        Cc = np.full((pr * pc, cap), SENTINEL, np.int32)
+        V = np.zeros((pr * pc, cap) + tuple(vdims), vals.dtype)
+        within = np.arange(len(rows)) - starts[tid]
+        R[tid, within] = lr
+        Cc[tid, within] = lc
+        V[tid, within] = vals_s
+        out = DistSpMat(
+            row=jnp.asarray(R.reshape(pr, pc, cap)),
+            col=jnp.asarray(Cc.reshape(pr, pc, cap)),
+            val=jnp.asarray(V.reshape((pr, pc, cap) + tuple(vdims))),
+            nnz=jnp.asarray(counts.reshape(pr, pc).astype(np.int32)),
+            shape=(int(M), int(N)), grid=(pr, pc))
+        if mesh is not None:
+            out = shard_put(out, mesh)
+        return out
+
+    def to_global_coo(self):
+        """Gather to host as (rows, cols, vals) in global int64 coords."""
+        pr, pc, cap = self.pr, self.pc, self.cap
+        R = np.asarray(self.row).reshape(pr, pc, cap)
+        C = np.asarray(self.col).reshape(pr, pc, cap)
+        V = np.asarray(self.val).reshape((pr, pc, cap) + self.val.shape[3:])
+        Nz = np.asarray(self.nnz).reshape(pr, pc)
+        rows, cols, vals = [], [], []
+        for i in range(pr):
+            for j in range(pc):
+                k = int(Nz[i, j])
+                rows.append(R[i, j, :k].astype(np.int64) + i * self.mb)
+                cols.append(C[i, j, :k].astype(np.int64) + j * self.nb)
+                vals.append(V[i, j, :k])
+        return (np.concatenate(rows), np.concatenate(cols),
+                np.concatenate(vals))
+
+    def to_dense(self, zero=0.0) -> np.ndarray:
+        r, c, v = self.to_global_coo()
+        out = np.full(self.shape + self.val.shape[3:], zero,
+                      np.asarray(self.val).dtype)
+        out[r, c] = v
+        return out
+
+
+# --------------------------------------------------------------------------
+# 3D (communication-avoiding) distributed sparse matrix
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DistSpMat3D:
+    """Sparse matrix on a (L, q, q) grid (paper §3.2, Fig 1).
+
+    dist='acol': input-A style — columns sliced into L outer slabs; layer l
+                 holds slab l as a 2D (q×q) matrix.
+    dist='brow': input-B style — rows sliced into L outer slabs.
+    dist='csub': output style (Fig 2) — within each column block j, columns
+                 are sub-sliced into L pieces; layer l holds sub-piece l.
+    """
+
+    row: Array   # (L, q, q, cap) int32
+    col: Array
+    val: Array
+    nnz: Array   # (L, q, q)
+    shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    grid: tuple[int, int, int] = dataclasses.field(metadata=dict(static=True))
+    dist: str = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def L(self):
+        return self.grid[0]
+
+    @property
+    def q(self):
+        return self.grid[1]
+
+    @property
+    def cap(self):
+        return self.row.shape[-1]
+
+    def block_sizes(self):
+        """(tile_rows, tile_cols) of each local tile.
+
+        Every dimension is padded to a multiple of L*q*q so that (a) the
+        contraction dims of acol-A and brow-B tiles agree and (b) partial-C
+        column blocks subdivide exactly L ways for the inter-layer all-to-all.
+        """
+        M, N = self.shape
+        L, q = self.L, self.q
+        if self.dist == "acol":
+            return _pad_to(M, L * q * q) // q, _pad_to(N, L * q * q) // (L * q)
+        if self.dist == "brow":
+            return _pad_to(M, L * q * q) // (L * q), _pad_to(N, L * q * q) // q
+        if self.dist == "csub":
+            return _pad_to(M, L * q * q) // q, _pad_to(N, L * q * q) // (L * q)
+        raise ValueError(self.dist)
+
+    def tile(self) -> COO:
+        cap = self.cap
+        tr, tc = self.block_sizes()
+        return COO(self.row.reshape(cap), self.col.reshape(cap),
+                   self.val.reshape((cap,) + self.val.shape[4:]),
+                   self.nnz.reshape(()), (tr, tc), "none")
+
+    def _global_offsets(self, l, i, j):
+        tr, tc = self.block_sizes()
+        M, N = self.shape
+        L, q = self.L, self.q
+        if self.dist == "acol":
+            return i * tr, l * (tc * q) + j * tc
+        if self.dist == "brow":
+            return l * (tr * q) + i * tr, j * tc
+        if self.dist == "csub":
+            return i * tr, j * (tc * L) + l * tc
+        raise ValueError(self.dist)
+
+    @staticmethod
+    def from_global_coo(shape, rows, cols, vals, grid, dist, *,
+                        mesh: Mesh = None, cap=None, pad=1.25,
+                        random_permute=False, seed=0):
+        L, q, _ = grid
+        M, N = shape
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        vals = np.asarray(vals)
+        if random_permute:
+            rng = np.random.default_rng(seed)
+            rp = rng.permutation(M).astype(np.int64)
+            cp = rp if M == N else rng.permutation(N).astype(np.int64)
+            rows, cols = rp[rows], cp[cols]
+        proto = DistSpMat3D(None, None, None, None, (int(M), int(N)),
+                            (L, q, q), dist)
+        tr, tc = proto.block_sizes()
+        if dist == "acol":
+            l = cols // (tc * q)
+            i, j = rows // tr, (cols % (tc * q)) // tc
+            lr, lc = rows % tr, cols % tc
+        elif dist == "brow":
+            l = rows // (tr * q)
+            i, j = (rows % (tr * q)) // tr, cols // tc
+            lr, lc = rows % tr, cols % tc
+        else:  # csub
+            jblk = cols // (tc * L)
+            rem = cols % (tc * L)
+            l, j = rem // tc, jblk
+            i = rows // tr
+            lr, lc = rows % tr, rem % tc
+        tid = (l * q + i) * q + j
+        order = np.lexsort((lc.astype(np.int32), lr.astype(np.int32), tid))
+        tid = tid[order]
+        lr, lc, vals_s = lr[order].astype(np.int32), lc[order].astype(np.int32), vals[order]
+        ntile = L * q * q
+        counts = np.bincount(tid, minlength=ntile)
+        if cap is None:
+            cap = max(8, int(math.ceil((counts.max() if len(rows) else 1)
+                                       * pad / 8) * 8))
+        if len(rows) and counts.max() > cap:
+            raise ValueError(f"tile overflow: {counts.max()} > {cap}")
+        starts = np.zeros(ntile, np.int64)
+        starts[1:] = np.cumsum(counts)[:-1]
+        R = np.full((ntile, cap), SENTINEL, np.int32)
+        Cc = np.full((ntile, cap), SENTINEL, np.int32)
+        V = np.zeros((ntile, cap), vals.dtype)
+        within = np.arange(len(rows)) - starts[tid]
+        R[tid, within] = lr
+        Cc[tid, within] = lc
+        V[tid, within] = vals_s
+        out = DistSpMat3D(
+            row=jnp.asarray(R.reshape(L, q, q, cap)),
+            col=jnp.asarray(Cc.reshape(L, q, q, cap)),
+            val=jnp.asarray(V.reshape(L, q, q, cap)),
+            nnz=jnp.asarray(counts.reshape(L, q, q).astype(np.int32)),
+            shape=(int(M), int(N)), grid=(L, q, q), dist=dist)
+        if mesh is not None:
+            out = shard_put(out, mesh)
+        return out
+
+    def to_global_coo(self):
+        L, q, cap = self.L, self.q, self.cap
+        R = np.asarray(self.row)
+        C = np.asarray(self.col)
+        V = np.asarray(self.val)
+        Nz = np.asarray(self.nnz)
+        rows, cols, vals = [], [], []
+        for l in range(L):
+            for i in range(q):
+                for j in range(q):
+                    k = int(Nz[l, i, j])
+                    ro, co = self._global_offsets(l, i, j)
+                    rows.append(R[l, i, j, :k].astype(np.int64) + ro)
+                    cols.append(C[l, i, j, :k].astype(np.int64) + co)
+                    vals.append(V[l, i, j, :k])
+        return (np.concatenate(rows), np.concatenate(cols),
+                np.concatenate(vals))
+
+    def to_dense(self, zero=0.0) -> np.ndarray:
+        r, c, v = self.to_global_coo()
+        out = np.full(self.shape, zero, np.asarray(self.val).dtype)
+        out[r, c] = v
+        return out
+
+
+def _pad_to(n, mult):
+    return _ceil(n, mult) * mult
+
+
+# --------------------------------------------------------------------------
+# distributed dense / sparse vectors
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DistVec:
+    """Fully distributed dense vector, no replication (paper §2.2)."""
+
+    data: Array  # (pr, pc, vb)
+    n: int = dataclasses.field(metadata=dict(static=True))
+    grid: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    layout: str = dataclasses.field(default="col", metadata=dict(static=True))
+
+    @property
+    def vb(self):
+        return self.data.shape[2]
+
+    def piece_id(self, i, j):
+        return j * self.grid[0] + i if self.layout == "col" \
+            else i * self.grid[1] + j
+
+    @staticmethod
+    def from_global(x, grid, layout="col", mesh: Mesh = None):
+        pr, pc = grid
+        x = np.asarray(x)
+        n = x.shape[0]
+        vb = _ceil(n, pr * pc)
+        xp = np.zeros((pr * pc * vb,) + x.shape[1:], x.dtype)
+        xp[:n] = x
+        pieces = xp.reshape((pr * pc, vb) + x.shape[1:])
+        out = np.empty((pr, pc, vb) + x.shape[1:], x.dtype)
+        for i in range(pr):
+            for j in range(pc):
+                k = j * pr + i if layout == "col" else i * pc + j
+                out[i, j] = pieces[k]
+        v = DistVec(jnp.asarray(out), int(n), (pr, pc), layout)
+        if mesh is not None:
+            v = shard_put(v, mesh)
+        return v
+
+    def to_global(self) -> np.ndarray:
+        pr, pc = self.grid
+        d = np.asarray(self.data)
+        vb = self.vb
+        xp = np.empty((pr * pc, vb) + d.shape[3:], d.dtype)
+        for i in range(pr):
+            for j in range(pc):
+                k = j * pr + i if self.layout == "col" else i * pc + j
+                xp[k] = d[i, j]
+        return xp.reshape((pr * pc * vb,) + d.shape[3:])[:self.n]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DistSpVec:
+    """Fully distributed sparse vector (FullyDistSpVec)."""
+
+    idx: Array   # (pr, pc, cap) int32, piece-local indices
+    val: Array   # (pr, pc, cap)
+    nnz: Array   # (pr, pc) int32
+    n: int = dataclasses.field(metadata=dict(static=True))
+    grid: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    layout: str = dataclasses.field(default="col", metadata=dict(static=True))
+
+    @property
+    def cap(self):
+        return self.idx.shape[-1]
+
+    @property
+    def vb(self):
+        pr, pc = self.grid
+        return _ceil(self.n, pr * pc)
+
+    @staticmethod
+    def from_global(idx, val, n, grid, cap=None, layout="col",
+                    mesh: Mesh = None, pad=1.5):
+        pr, pc = grid
+        idx = np.asarray(idx, np.int64)
+        val = np.asarray(val)
+        vb = _ceil(n, pr * pc)
+        piece = idx // vb
+        local = (idx % vb).astype(np.int32)
+        counts = np.bincount(piece, minlength=pr * pc)
+        if cap is None:
+            cap = max(8, int(math.ceil((counts.max() if len(idx) else 1)
+                                       * pad / 8) * 8))
+        if len(idx) and counts.max() > cap:
+            raise ValueError("piece overflow")
+        order = np.lexsort((local, piece))
+        piece, local, val_s = piece[order], local[order], val[order]
+        starts = np.zeros(pr * pc, np.int64)
+        starts[1:] = np.cumsum(counts)[:-1]
+        I = np.full((pr * pc, cap), SENTINEL, np.int32)
+        V = np.zeros((pr * pc, cap), val.dtype)
+        within = np.arange(len(idx)) - starts[piece]
+        I[piece, within] = local
+        V[piece, within] = val_s
+        Ii = np.empty((pr, pc, cap), np.int32)
+        Vv = np.empty((pr, pc, cap), val.dtype)
+        Nz = np.empty((pr, pc), np.int32)
+        for i in range(pr):
+            for j in range(pc):
+                k = j * pr + i if layout == "col" else i * pc + j
+                Ii[i, j], Vv[i, j], Nz[i, j] = I[k], V[k], counts[k]
+        v = DistSpVec(jnp.asarray(Ii), jnp.asarray(Vv), jnp.asarray(Nz),
+                      int(n), (pr, pc), layout)
+        if mesh is not None:
+            v = shard_put(v, mesh)
+        return v
+
+    def to_global(self):
+        pr, pc = self.grid
+        I = np.asarray(self.idx)
+        V = np.asarray(self.val)
+        Nz = np.asarray(self.nnz)
+        idxs, vals = [], []
+        for i in range(pr):
+            for j in range(pc):
+                k = j * pr + i if self.layout == "col" else i * pc + j
+                c = int(Nz[i, j])
+                idxs.append(I[i, j, :c].astype(np.int64) + k * self.vb)
+                vals.append(V[i, j, :c])
+        idx = np.concatenate(idxs)
+        val = np.concatenate(vals)
+        keep = idx < self.n
+        return idx[keep], val[keep]
+
+    def to_global_dense(self, zero=0.0):
+        idx, val = self.to_global()
+        out = np.full((self.n,), zero, np.asarray(self.val).dtype)
+        out[idx] = val
+        return out
+
+
+# --------------------------------------------------------------------------
+# sharding helpers
+# --------------------------------------------------------------------------
+
+_SPEC2 = {"DistSpMat": dict(row=P("row", "col", None),
+                            col=P("row", "col", None),
+                            val=P("row", "col", None),
+                            nnz=P("row", "col")),
+          "DistSpMat3D": dict(row=P("layer", "row", "col", None),
+                              col=P("layer", "row", "col", None),
+                              val=P("layer", "row", "col", None),
+                              nnz=P("layer", "row", "col")),
+          "DistVec": dict(data=P("row", "col", None)),
+          "DistSpVec": dict(idx=P("row", "col", None),
+                            val=P("row", "col", None),
+                            nnz=P("row", "col"))}
+
+
+def specs_of(obj):
+    """Matching pytree of PartitionSpecs for a distributed object."""
+    table = _SPEC2[type(obj).__name__]
+
+    def fix(name, arr):
+        spec = table[name]
+        extra = arr.ndim - len(spec)
+        return P(*(tuple(spec) + (None,) * extra))
+
+    kw = {f.name: fix(f.name, getattr(obj, f.name))
+          for f in dataclasses.fields(obj)
+          if f.name in table}
+    rest = {f.name: getattr(obj, f.name) for f in dataclasses.fields(obj)
+            if f.name not in table}
+    return dataclasses.replace(obj, **{**kw, **rest})
+
+
+def shard_put(obj, mesh: Mesh):
+    """Place a distributed object onto its mesh with the canonical sharding."""
+    spec_tree = specs_of(obj)
+    table = _SPEC2[type(obj).__name__]
+    kw = {}
+    for f in dataclasses.fields(obj):
+        if f.name in table:
+            kw[f.name] = jax.device_put(
+                getattr(obj, f.name),
+                NamedSharding(mesh, getattr(spec_tree, f.name)))
+    return dataclasses.replace(obj, **kw)

@@ -1,0 +1,235 @@
+"""Distributed matrix/vector helper operations used by the graph apps.
+
+All are thin shard_map wrappers over the local COO ops; piece-aligned
+operations (masking a sparse vector with a dense vector in the same layout,
+elementwise tile ops between matrices on the same grid) need NO
+communication — the payoff of CombBLAS's superimposed distributions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .coo import COO, SENTINEL
+from .dist import DistSpMat, DistSpVec, DistVec, specs_of
+from .semiring import Monoid, segment_reduce
+
+Array = jax.Array
+
+
+def mat_apply_local(a: DistSpMat, fn, *, mesh: Mesh) -> DistSpMat:
+    """Apply ``fn: COO -> COO`` (same capacity) tile-wise."""
+
+    def body(at):
+        t = fn(at.tile())
+        return (t.row[None, None], t.col[None, None], t.val[None, None],
+                t.nnz[None, None])
+
+    row, col, val, nnz = jax.shard_map(
+        body, mesh=mesh, in_specs=(specs_of(a),),
+        out_specs=(P("row", "col", None), P("row", "col", None),
+                   P("row", "col", None), P("row", "col")))(a)
+    return DistSpMat(row, col, val, nnz, a.shape, a.grid)
+
+
+def mat_ewise_local(a: DistSpMat, b: DistSpMat, fn, *, mesh: Mesh) \
+        -> DistSpMat:
+    """fn: (COO, COO) -> COO on aligned tiles (same grid) — no comm."""
+    assert a.grid == b.grid and a.shape == b.shape
+
+    def body(at, bt):
+        t = fn(at.tile(), bt.tile())
+        return (t.row[None, None], t.col[None, None], t.val[None, None],
+                t.nnz[None, None])
+
+    row, col, val, nnz = jax.shard_map(
+        body, mesh=mesh, in_specs=(specs_of(a), specs_of(b)),
+        out_specs=(P("row", "col", None), P("row", "col", None),
+                   P("row", "col", None), P("row", "col")))(a, b)
+    return DistSpMat(row, col, val, nnz, a.shape, a.grid)
+
+
+def mat_reduce(a: DistSpMat, axis: int, add: Monoid, *, mesh: Mesh) \
+        -> DistVec:
+    """Row (axis=1) or column (axis=0) reduction → DistVec.
+
+    axis=1: result over rows, layout 'row' (psum along 'col', scattered).
+    axis=0: result over cols, layout 'col' (psum along 'row', scattered).
+    """
+
+    def body(at):
+        t = at.tile()
+        local = t.reduce(axis, add)          # (mb,) or (nb,)
+        red_axis = "col" if axis == 1 else "row"
+        if add.tag == "sum":
+            piece = jax.lax.psum_scatter(local, red_axis,
+                                         scatter_dimension=0, tiled=True)
+        else:
+            q = a.grid[1] if axis == 1 else a.grid[0]
+            parts = jax.lax.all_gather(local, red_axis)
+            red = parts[0]
+            for s in range(1, q):
+                red = add.op(red, parts[s])
+            k = jax.lax.axis_index(red_axis)
+            piece = red.reshape(q, -1)[k]
+        return piece[None, None]
+
+    out = jax.shard_map(body, mesh=mesh, in_specs=(specs_of(a),),
+                        out_specs=P("row", "col", None))(a)
+    n = a.shape[0] if axis == 1 else a.shape[1]
+    return DistVec(out, n, a.grid, "row" if axis == 1 else "col")
+
+
+def mat_scale_cols(a: DistSpMat, v: DistVec, mul=jnp.multiply, *,
+                   mesh: Mesh) -> DistSpMat:
+    """A[:, j] *= v[j]. v layout 'col' (gathered along 'row' like SpMV x)."""
+    assert v.layout == "col"
+
+    def body(at, xd):
+        t = at.tile()
+        xj = jax.lax.all_gather(xd.reshape(-1), "row", tiled=True)
+        t2 = t.scale_cols(xj, mul)
+        return (t2.row[None, None], t2.col[None, None], t2.val[None, None],
+                t2.nnz[None, None])
+
+    row, col, val, nnz = jax.shard_map(
+        body, mesh=mesh, in_specs=(specs_of(a), P("row", "col", None)),
+        out_specs=(P("row", "col", None), P("row", "col", None),
+                   P("row", "col", None), P("row", "col")))(a, v.data)
+    return DistSpMat(row, col, val, nnz, a.shape, a.grid)
+
+
+def mat_scale_rows(a: DistSpMat, v: DistVec, mul=jnp.multiply, *,
+                   mesh: Mesh) -> DistSpMat:
+    """A[i, :] *= v[i]. v layout 'row' (gathered along 'col')."""
+    assert v.layout == "row"
+
+    def body(at, xd):
+        t = at.tile()
+        xi = jax.lax.all_gather(xd.reshape(-1), "col", tiled=True)
+        t2 = t.scale_rows(xi, mul)
+        return (t2.row[None, None], t2.col[None, None], t2.val[None, None],
+                t2.nnz[None, None])
+
+    row, col, val, nnz = jax.shard_map(
+        body, mesh=mesh, in_specs=(specs_of(a), P("row", "col", None)),
+        out_specs=(P("row", "col", None), P("row", "col", None),
+                   P("row", "col", None), P("row", "col")))(a, v.data)
+    return DistSpMat(row, col, val, nnz, a.shape, a.grid)
+
+
+def mat_transpose(a: DistSpMat, *, mesh: Mesh) -> DistSpMat:
+    """A^T on a square grid: swap tiles across the diagonal + local swap."""
+    pr, pc = a.grid
+    assert pr == pc
+    q = pr
+    perm = [(i * q + j, j * q + i) for i in range(q) for j in range(q)]
+
+    def body(at):
+        f = lambda t: jax.lax.ppermute(t, ("row", "col"), perm)
+        return (f(at.col), f(at.row), f(at.val), f(at.nnz))
+
+    col, row, val, nnz = jax.shard_map(
+        body, mesh=mesh, in_specs=(specs_of(a),),
+        out_specs=(P("row", "col", None), P("row", "col", None),
+                   P("row", "col", None), P("row", "col")))(a)
+    # note the (col, row) swap above: returned fields are already transposed
+    return DistSpMat(col, row, val, nnz, (a.shape[1], a.shape[0]), a.grid)
+
+
+def mat_select_lower(a: DistSpMat, *, mesh: Mesh, strict=True) -> DistSpMat:
+    """Keep entries with global row > col (strict lower triangle)."""
+    mb, nb = a.mb, a.nb
+
+    def body(at):
+        t = at.tile()
+        i = jax.lax.axis_index("row")
+        j = jax.lax.axis_index("col")
+        grow = t.row.astype(jnp.int64) + i.astype(jnp.int64) * mb
+        gcol = t.col.astype(jnp.int64) + j.astype(jnp.int64) * nb
+        keep = (grow > gcol) if strict else (grow >= gcol)
+        t2 = _prune_mask(t, keep)
+        return (t2.row[None, None], t2.col[None, None], t2.val[None, None],
+                t2.nnz[None, None])
+
+    row, col, val, nnz = jax.shard_map(
+        body, mesh=mesh, in_specs=(specs_of(a),),
+        out_specs=(P("row", "col", None), P("row", "col", None),
+                   P("row", "col", None), P("row", "col")))(a)
+    return DistSpMat(row, col, val, nnz, a.shape, a.grid)
+
+
+def _prune_mask(t: COO, keep: Array) -> COO:
+    keep = keep & t.mask()
+    order = jnp.argsort(~keep, stable=True)
+    row = jnp.where(keep[order], t.row[order], SENTINEL)
+    col = jnp.where(keep[order], t.col[order], SENTINEL)
+    val = jnp.where(keep[order], t.val[order], 0)
+    return COO(row, col, val, jnp.sum(keep).astype(jnp.int32), t.shape,
+               "none")
+
+
+def mat_sum(a: DistSpMat) -> Array:
+    """Σ stored values (arithmetic). Works on the sharded arrays directly."""
+    return jnp.sum(jnp.where(a.row != SENTINEL, a.val, 0))
+
+
+def mat_nnz(a: DistSpMat) -> Array:
+    return jnp.sum(a.nnz)
+
+
+# ---------------- piece-aligned vector ops (no communication) -------------
+
+def vec_ewise(u: DistVec, v: DistVec, fn) -> DistVec:
+    assert u.layout == v.layout and u.grid == v.grid
+    return DistVec(fn(u.data, v.data), u.n, u.grid, u.layout)
+
+
+def vec_apply(u: DistVec, fn) -> DistVec:
+    return DistVec(fn(u.data), u.n, u.grid, u.layout)
+
+
+def vec_sum(u: DistVec) -> Array:
+    # padding beyond n is zero by construction in from_global; keep it so
+    return jnp.sum(u.data)
+
+
+def spvec_mask(x: DistSpVec, v: DistVec, keep_fn) -> DistSpVec:
+    """Filter sparse entries by keep_fn(x_val, v_val_at_idx) — layouts must
+    match so lookup is piece-local (no comm)."""
+    assert x.layout == v.layout and x.grid == v.grid
+    vb = v.data.shape[2]
+
+    def per_piece(xi, xv, xn, vd):
+        ok = (xi != SENTINEL)
+        vals_at = vd[jnp.clip(xi, 0, vb - 1)]
+        keep = ok & keep_fn(xv, vals_at)
+        order = jnp.argsort(~keep, stable=True)
+        ni = jnp.where(keep[order], xi[order], SENTINEL)
+        nv = jnp.where(keep[order], xv[order], 0)
+        return ni, nv, jnp.sum(keep).astype(jnp.int32)
+
+    f = jax.vmap(jax.vmap(per_piece))
+    ni, nv, nn = f(x.idx, x.val, x.nnz, v.data)
+    return DistSpVec(ni, nv, nn, x.n, x.grid, x.layout)
+
+
+def vec_scatter_spvec(v: DistVec, x: DistSpVec, fn) -> DistVec:
+    """v[i] = fn(v[i], x[i]) for stored x entries — piece-aligned scatter."""
+    assert x.layout == v.layout and x.grid == v.grid
+
+    def per_piece(vd, xi, xv):
+        cur = vd[jnp.clip(xi, 0, vd.shape[0] - 1)]
+        new = fn(cur, xv)
+        return vd.at[xi].set(new, mode="drop")
+
+    return DistVec(jax.vmap(jax.vmap(per_piece))(v.data, x.idx, x.val),
+                   v.n, v.grid, v.layout)
+
+
+def spvec_nnz(x: DistSpVec) -> Array:
+    return jnp.sum(x.nnz)

@@ -1,0 +1,306 @@
+"""Distributed SpGEMM: 2D SUMMA (rotation + all-gather) and 3D CA (paper §3.2).
+
+2D (paper's Sparse SUMMA, hardware-adapted — DESIGN.md §4.1):
+  - variant='rotation' (default): Cannon-style systolic schedule. One
+    multi-axis collective-permute performs the initial skew, then q stages of
+    neighbor rotation (A left along 'col', B up along 'row') each followed by
+    a local O(flops) expansion. Communication volume per device equals the
+    paper's Table 1 bandwidth term O(nnz(A+B)/√p); the primitive is the
+    torus-native permute instead of an MPI broadcast.
+  - variant='allgather': the literal broadcast formulation — each device
+    all-gathers its process row of A and process column of B, then runs the
+    q local multiplies. Same volume, √q-deeper buffers (the memory/latency
+    tradeoff the paper describes for 2D SUMMA at scale).
+
+3D CA (paper Fig 2): inputs on a (L, q, q) grid, A column-sliced and B
+row-sliced across layers. Each layer runs an independent 2D multiply over a
+contraction dim shrunk by L (broadcast/rotation volume shrinks by the
+paper's √c factor on the smaller communicator), then one inter-layer
+all-to-all scatters partial C column sub-blocks and a local semiring merge
+forms C distributed like A.
+
+Merging (paper §5 "binary merge scheme"): merge='deferred' concatenates all
+stage products and sorts once; merge='incremental' dedups per stage into a
+bounded accumulator (less memory, more sorts) — the same tradeoff the paper
+spreads across SUMMA stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .coo import COO, SENTINEL
+from .dist import DistSpMat, DistSpMat3D, specs_of
+from .local_spgemm import _expand
+from .semiring import ARITHMETIC, Semiring
+
+Array = jax.Array
+
+
+def _cannon_perms(q, skew_a=True):
+    """(src, dst) pairs on a row-major q×q grid for the initial skew."""
+    if skew_a:  # A(i, j) -> A(i, (j - i) mod q)
+        return [(r * q + c, r * q + (c - r) % q)
+                for r in range(q) for c in range(q)]
+    # B(i, j) -> B((i - j) mod q, j)
+    return [(r * q + c, ((r - c) % q) * q + c)
+            for r in range(q) for c in range(q)]
+
+
+def _shift_perm(q, axis_len, left=True):
+    return [(s, (s - 1) % axis_len) if left else (s, (s + 1) % axis_len)
+            for s in range(axis_len)]
+
+
+def _tile_permute(tile: COO, axes, perm) -> COO:
+    r = jax.lax.ppermute(tile.row, axes, perm)
+    c = jax.lax.ppermute(tile.col, axes, perm)
+    v = jax.lax.ppermute(tile.val, axes, perm)
+    n = jax.lax.ppermute(tile.nnz, axes, perm)
+    return COO(r, c, v, n, tile.shape, "none")
+
+
+def _merge_products(rows, cols, vals, nvalid, shape, sr, out_cap, order="row"):
+    prods = COO(rows, cols, vals,
+                jnp.minimum(nvalid, rows.shape[0]).astype(jnp.int32),
+                shape, "none")
+    c = prods.dedup(sr.add, order=order).with_cap(out_cap, sr.add.identity)
+    return c, (c.nnz <= out_cap)
+
+
+def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
+                     variant, merge):
+    """Body run per device under shard_map for the 2D algorithm."""
+    shape = (a_tile.shape[0], b_tile.shape[1])
+    stage_cap = prod_cap
+
+    if variant == "allgather":
+        # gather my process row of A and process column of B (the broadcast
+        # formulation; all stages' operands live simultaneously)
+        ar = jax.tree.map(lambda x: jax.lax.all_gather(x, "col"), a_tile)
+        bc = jax.tree.map(lambda x: jax.lax.all_gather(x, "row"), b_tile)
+
+        def stage(s):
+            at = COO(ar.row[s], ar.col[s], ar.val[s], ar.nnz[s],
+                     a_tile.shape, "none")
+            bt = COO(bc.row[s], bc.col[s], bc.val[s], bc.nnz[s],
+                     b_tile.shape, "none")
+            return _expand(at, bt, sr, stage_cap)
+
+        outs = [stage(s) for s in range(q)]
+        rows = jnp.concatenate([o[0] for o in outs])
+        cols = jnp.concatenate([o[1] for o in outs])
+        vals = jnp.concatenate([o[2] for o in outs])
+        total = sum(o[3] for o in outs)
+        ok = jnp.all(jnp.stack([o[4] for o in outs]))
+        # compact: products are per-stage padded; dedup handles scattering
+        c, ok2 = _merge_products(rows, cols, vals, total, shape, sr, out_cap)
+        # nvalid above counts only真 entries; dedup sorts padding to the end,
+        # but nnz must count actual valid products:
+        return c, ok & ok2
+
+    # rotation (Cannon)
+    axes = ("row", "col")
+    a_skew = _tile_permute(a_tile, axes, _cannon_perms(q, skew_a=True))
+    b_skew = _tile_permute(b_tile, axes, _cannon_perms(q, skew_a=False))
+
+    if merge == "incremental":
+        acc = COO.empty(shape, out_cap, dtype=vals_dtype(sr, a_tile, b_tile),
+                        fill=sr.add.identity)
+        # constants entering a shard_map scan carry must be marked varying
+        acc = jax.tree.map(
+            lambda x: jax.lax.pcast(x, ("row", "col"), to="varying"), acc)
+
+        def body(carry, _):
+            at, bt, acc, ok = carry
+            r, c, v, n, okx = _expand(at, bt, sr, stage_cap)
+            both_r = jnp.concatenate([acc.row, r])
+            both_c = jnp.concatenate([acc.col, c])
+            both_v = jnp.concatenate([acc.val, v])
+            merged = COO(both_r, both_c, both_v, acc.nnz + jnp.minimum(n, stage_cap),
+                         shape, "none").dedup(sr.add).with_cap(
+                             out_cap, sr.add.identity)
+            ok = ok & okx & (merged.nnz <= out_cap)
+            at = _tile_permute(at, "col", _shift_perm(q, q, left=True))
+            bt = _tile_permute(bt, "row", _shift_perm(q, q, left=True))
+            return (at, bt, merged, ok), None
+
+        ok0 = jax.lax.pcast(jnp.bool_(True), ("row", "col"), to="varying")
+        (at, bt, acc, ok), _ = jax.lax.scan(
+            body, (a_skew, b_skew, acc, ok0), None, length=q)
+        return acc, ok
+
+    def body(carry, _):
+        at, bt = carry
+        r, c, v, n, okx = _expand(at, bt, sr, stage_cap)
+        at = _tile_permute(at, "col", _shift_perm(q, q, left=True))
+        bt = _tile_permute(bt, "row", _shift_perm(q, q, left=True))
+        return (at, bt), (r, c, v, jnp.minimum(n, stage_cap), okx)
+
+    (_, _), (rs, cs, vs, ns, oks) = jax.lax.scan(
+        body, (a_skew, b_skew), None, length=q)
+    rows = rs.reshape(-1)
+    cols = cs.reshape(-1)
+    vals = vs.reshape((-1,) + vs.shape[2:])
+    c, ok2 = _merge_products(rows, cols, vals, rows.shape[0], shape, sr,
+                             out_cap)
+    return c, jnp.all(oks) & ok2
+
+
+def vals_dtype(sr, a_tile, b_tile):
+    return sr.out_dtype(a_tile.dtype, b_tile.dtype)
+
+
+def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
+              mesh: Mesh, prod_cap: int, out_cap: int,
+              variant: str = "rotation", merge: str = "deferred"):
+    """C = A ⊕.⊗ B on the 2D grid. Returns (DistSpMat, ok[pr,pc])."""
+    assert a.grid == b.grid and a.pr == a.pc, "2D SpGEMM needs a square grid"
+    assert a.shape[1] == b.shape[0]
+    q = a.pr
+
+    def body(at, bt):
+        c, ok = _local_spgemm_2d(
+            COO(at.row.reshape(-1), at.col.reshape(-1),
+                at.val.reshape((-1,) + at.val.shape[3:]), at.nnz.reshape(()),
+                (a.mb, a.nb), "none"),
+            COO(bt.row.reshape(-1), bt.col.reshape(-1),
+                bt.val.reshape((-1,) + bt.val.shape[3:]), bt.nnz.reshape(()),
+                (b.mb, b.nb), "none"),
+            sr, q, prod_cap, out_cap, variant, merge)
+        return (c.row[None, None], c.col[None, None], c.val[None, None],
+                c.nnz[None, None], ok[None, None])
+
+    out_specs = (P("row", "col", None), P("row", "col", None),
+                 P("row", "col", None), P("row", "col"), P("row", "col"))
+    f = jax.shard_map(body, mesh=mesh,
+                      in_specs=(specs_of(a), specs_of(b)),
+                      out_specs=out_specs)
+    row, col, val, nnz, ok = f(a, b)
+    cmat = DistSpMat(row, col, val, nnz, (a.shape[0], b.shape[1]), a.grid)
+    return cmat, ok
+
+
+def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
+              mesh: Mesh, prod_cap: int, out_cap: int,
+              merge: str = "deferred", variant: str = "rotation"):
+    """Communication-avoiding SpGEMM on a (L, q, q) grid (paper Fig 2).
+
+    Returns (C3 [dist='csub'], ok[L,q,q]).
+    """
+    assert a3.dist == "acol" and b3.dist == "brow"
+    assert a3.grid == b3.grid
+    L, q = a3.L, a3.q
+    tr_a, tc_a = a3.block_sizes()
+    tr_b, tc_b = b3.block_sizes()
+    assert tc_a == tr_b, (tc_a, tr_b)
+    kbl = tc_b // L          # C column sub-block width after layer split
+    c_shape = (a3.shape[0], b3.shape[1])
+
+    def body(at, bt):
+        a_tile = COO(at.row.reshape(-1), at.col.reshape(-1),
+                     at.val.reshape(-1), at.nnz.reshape(()),
+                     (tr_a, tc_a), "none")
+        b_tile = COO(bt.row.reshape(-1), bt.col.reshape(-1),
+                     bt.val.reshape(-1), bt.nnz.reshape(()),
+                     (tr_b, tc_b), "none")
+        # per-layer 2D multiply ('row'/'col' collectives are layer-local)
+        c_part, ok = _local_spgemm_2d(a_tile, b_tile, sr, q,
+                                      prod_cap, prod_cap, variant, "deferred")
+        # ---- inter-layer all-to-all (Fig 2, right) --------------------
+        # destination layer of an entry = its column sub-block
+        dest = jnp.where(c_part.mask(), c_part.col // kbl, L)
+        cap_l = c_part.cap // L
+        # radix-place each entry at dest*cap_l + rank_within_dest
+        order = jnp.argsort(dest, stable=True)
+        d_sorted = dest[order]
+        seg_start = jnp.searchsorted(d_sorted, jnp.arange(L + 1),
+                                     side="left").astype(jnp.int32)
+        counts = seg_start[1:] - seg_start[:-1]
+        ok = ok & jnp.all(counts <= cap_l)
+        within = jnp.arange(c_part.cap, dtype=jnp.int32) - \
+            seg_start[jnp.clip(d_sorted, 0, L - 1)]
+        slot = jnp.where(d_sorted < L,
+                         d_sorted * cap_l + jnp.minimum(within, cap_l - 1),
+                         L * cap_l)  # dropped
+        buf_r = jnp.full((L * cap_l,), SENTINEL, jnp.int32)
+        buf_c = jnp.full((L * cap_l,), SENTINEL, jnp.int32)
+        buf_v = jnp.full((L * cap_l,), sr.add.identity, c_part.val.dtype)
+        keep = (d_sorted < L) & (within < cap_l)
+        # dropped entries write out-of-bounds (mode='drop') — never a live slot
+        slotk = jnp.where(keep, slot, L * cap_l)
+        rs, cs_, vs = (c_part.row[order], c_part.col[order],
+                       c_part.val[order])
+        buf_r = buf_r.at[slotk].set(rs, mode="drop")
+        buf_c = buf_c.at[slotk].set(cs_, mode="drop")
+        buf_v = buf_v.at[slotk].set(vs, mode="drop")
+        # exchange: piece t -> layer t
+        def a2a(x):
+            return jax.lax.all_to_all(x.reshape(L, cap_l), "layer", 0, 0,
+                                      tiled=False).reshape(L * cap_l)
+        buf_r, buf_c, buf_v = a2a(buf_r), a2a(buf_c), a2a(buf_v)
+        my_layer = jax.lax.axis_index("layer")
+        # localize columns to my sub-block and merge
+        valid = buf_r != SENTINEL
+        lc = jnp.where(valid, buf_c - my_layer * kbl, SENTINEL)
+        merged = COO(jnp.where(valid, buf_r, SENTINEL), lc, buf_v,
+                     jnp.sum(valid).astype(jnp.int32), (tr_a, kbl),
+                     "none").dedup(sr.add).with_cap(out_cap, sr.add.identity)
+        ok = ok & (merged.nnz <= out_cap)
+        return (merged.row[None, None, None], merged.col[None, None, None],
+                merged.val[None, None, None], merged.nnz[None, None, None],
+                ok[None, None, None])
+
+    out_specs = (P("layer", "row", "col", None),
+                 P("layer", "row", "col", None),
+                 P("layer", "row", "col", None),
+                 P("layer", "row", "col"), P("layer", "row", "col"))
+    f = jax.shard_map(body, mesh=mesh,
+                      in_specs=(specs_of(a3), specs_of(b3)),
+                      out_specs=out_specs)
+    row, col, val, nnz, ok = f(a3, b3)
+    c3 = DistSpMat3D(row, col, val, nnz, c_shape, a3.grid, "csub")
+    return c3, ok
+
+
+def spgemm_2d_batched(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC,
+                      *, mesh: Mesh, prod_cap: int, out_cap: int,
+                      nbatch: int, variant: str = "rotation"):
+    """Batched SpGEMM (paper §7.2): form C in ``nbatch`` column batches.
+
+    Each batch multiplies A by the column-slab restriction of B, yielding a
+    DistSpMat for that slab; the caller consumes batches one at a time
+    (HipMCL-style) so the full C never needs to exist in memory. Returns a
+    list of (C_batch, ok) with C_batch's shape = full C shape (entries only
+    in the slab).
+    """
+    nb_cols = b.nb  # tile width of B
+    slab = -(-nb_cols // nbatch)
+    outs = []
+    for t in range(nbatch):
+        lo = t * slab
+
+        def keep_fn(tile_cols):
+            return (tile_cols >= lo) & (tile_cols < lo + slab)
+
+        bt = _restrict_cols(b, lo, slab)
+        c, ok = spgemm_2d(a, bt, sr, mesh=mesh, prod_cap=prod_cap,
+                          out_cap=out_cap, variant=variant)
+        outs.append((c, ok))
+    return outs
+
+
+def _restrict_cols(b: DistSpMat, lo: int, width: int) -> DistSpMat:
+    """Zero out entries outside tile-local columns [lo, lo+width)."""
+    keep = (b.col >= lo) & (b.col < lo + width) & (b.col != SENTINEL)
+    # compact each tile: sort kept-first along the cap axis
+    order = jnp.argsort(~keep, axis=-1, stable=True)
+    row = jnp.take_along_axis(jnp.where(keep, b.row, SENTINEL), order, -1)
+    col = jnp.take_along_axis(jnp.where(keep, b.col, SENTINEL), order, -1)
+    val = jnp.take_along_axis(jnp.where(keep, b.val, 0), order, -1)
+    nnz = jnp.sum(keep, axis=-1).astype(jnp.int32)
+    return DistSpMat(row, col, val, nnz, b.shape, b.grid)

@@ -1,0 +1,240 @@
+"""Local SpMV / SpMSpV algorithm families (paper §4.2–4.3, Fig 3).
+
+The paper's multithreaded variants are reproduced as algorithmic variants
+(the thread-partitioning dimension changes the data structures and memory
+traffic, not just the parallel schedule — see DESIGN.md §4.5):
+
+SpMV  (dense x):
+  - ``spmv_row``  row-partitioned: requires row-major tile; per-row segments
+                  reduced in order (no scatter, streaming output — the
+                  paper's "better locality on y, whole x read").
+  - ``spmv_col``  col-partitioned: col-major tile, products scattered into a
+                  thread-private-accumulator analogue (dense scatter-add;
+                  only the owned x slice is read — the paper's tradeoff).
+
+SpMSpV (sparse x, f = nnz(x)):
+  - ``spmspv_sort``   merge products by sorting (heap-analogue; best very
+                      sparse vectors).
+  - ``spmspv_spa``    dense SPA accumulator + re-sparsify (best dense-ish).
+  - ``spmspv_bucket`` propagation blocking [Beamer et al.]: products are
+                      first binned by row-bucket, then each bucket is merged
+                      in a bucket-local SPA (the paper's SpMSpV-Bucket).
+
+All variants cost O(f + df) work like the paper's, accept arbitrary
+semirings, and return (sparse_y, ok_overflow_flag).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .coo import COO, SENTINEL, column_range
+from .semiring import ARITHMETIC, Monoid, Semiring, segment_reduce
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# sparse vector container (FullyDistSpVec's local piece)
+# --------------------------------------------------------------------------
+
+def spvec(idx: Array, val: Array, n: int, nnz=None):
+    """Canonical padded sparse vector: (idx[i32 cap], val[cap], nnz)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    nnz = jnp.asarray(idx.shape[0] if nnz is None else nnz, jnp.int32)
+    mask = jnp.arange(idx.shape[0], dtype=jnp.int32) < nnz
+    return jnp.where(mask, idx, SENTINEL), val, nnz
+
+
+def spvec_from_dense(x: Array, cap: int, zero=0):
+    present = x != zero
+    (idx,) = jnp.nonzero(present, size=cap, fill_value=SENTINEL)
+    nnz = jnp.minimum(jnp.sum(present), cap).astype(jnp.int32)
+    val = jnp.where(idx != SENTINEL, x[jnp.clip(idx, 0, x.shape[0] - 1)],
+                    jnp.asarray(zero, x.dtype))
+    return idx.astype(jnp.int32), val, nnz
+
+
+def spvec_to_dense(idx: Array, val: Array, n: int, zero=0) -> Array:
+    out = jnp.full((n,) + val.shape[1:], zero, val.dtype)
+    return out.at[idx].set(val, mode="drop")
+
+
+# --------------------------------------------------------------------------
+# SpMV, dense input vector
+# --------------------------------------------------------------------------
+
+def spmv_row(a: COO, x: Array, sr: Semiring = ARITHMETIC) -> Array:
+    """Row-partitioned SpMV: y = A ⊕.⊗ x via row-segment reduction."""
+    sa = a.sort("row")
+    xc = x[jnp.clip(sa.col, 0, a.shape[1] - 1)]
+    prod = sr.mul(sa.val, xc)
+    ids = jnp.where(sa.mask(), sa.row, a.shape[0])
+    return segment_reduce(prod, ids, a.shape[0], sr.add, sorted_ids=True)
+
+
+def spmv_col(a: COO, x: Array, sr: Semiring = ARITHMETIC) -> Array:
+    """Col-partitioned SpMV: products scattered into the output accumulator."""
+    sa = a.sort("col")
+    xc = x[jnp.clip(sa.col, 0, a.shape[1] - 1)]
+    prod = sr.mul(sa.val, xc)
+    m = a.shape[0]
+    vdims = prod.shape[1:]
+    out = jnp.full((m,) + vdims, sr.add.identity, prod.dtype)
+    rows = jnp.where(sa.mask(), sa.row, SENTINEL)
+    if sr.add.tag == "sum":
+        pm = sa.mask().reshape((-1,) + (1,) * len(vdims))
+        prod = jnp.where(pm, prod, jnp.zeros((), prod.dtype))
+        return out.at[rows].add(prod, mode="drop")
+    if sr.add.tag == "min":
+        return out.at[rows].min(prod, mode="drop")
+    if sr.add.tag == "max":
+        return out.at[rows].max(prod, mode="drop")
+    # generic monoid: fall back to a sort by row (honest extra cost vs 'row')
+    ids = jnp.where(sa.mask(), sa.row, m)
+    return segment_reduce(prod, ids, m, sr.add, sorted_ids=False)
+
+
+# --------------------------------------------------------------------------
+# SpMSpV, sparse input vector
+# --------------------------------------------------------------------------
+
+def _expand_spmspv(a: COO, xi: Array, xv: Array, xnnz: Array, sr: Semiring,
+                   prod_cap: int):
+    """Products A(:,k)·x_k for every nonzero x_k. O(df) like the paper."""
+    sa = a.sort("col")
+    k = jnp.where(jnp.arange(xi.shape[0]) < xnnz, xi, SENTINEL)
+    start, end = column_range(sa.col, k)
+    cnt = jnp.where(k != SENTINEL, end - start, 0)
+    off = jnp.cumsum(cnt) - cnt
+    nprod = jnp.sum(cnt)
+    ok = nprod <= prod_cap
+    s = jnp.arange(prod_cap, dtype=jnp.int32)
+    t = jnp.searchsorted(off + cnt, s, side="right").astype(jnp.int32)
+    tc = jnp.clip(t, 0, xi.shape[0] - 1)
+    a_idx = jnp.clip(start[tc] + (s - off[tc]), 0, sa.cap - 1)
+    valid = s < nprod
+    out_dtype = sr.out_dtype(a.dtype, xv.dtype)
+    rows = jnp.where(valid, sa.row[a_idx], SENTINEL)
+    vals = sr.mul(sa.val[a_idx], xv[tc]).astype(out_dtype)
+    vdims = vals.shape[1:]
+    vals = jnp.where(valid.reshape((-1,) + (1,) * len(vdims)), vals,
+                     jnp.asarray(sr.add.identity, out_dtype))
+    return rows, vals, nprod, ok
+
+
+def spmspv_sort(a: COO, xi, xv, xnnz, sr: Semiring = ARITHMETIC, *,
+                prod_cap: int, out_cap: int):
+    """Sort-merge SpMSpV (heap analogue). Returns ((yi, yv, ynnz), ok)."""
+    rows, vals, nprod, ok = _expand_spmspv(a, xi, xv, xnnz, sr, prod_cap)
+    vflat = vals.reshape(prod_cap, -1)
+    ops = [rows] + [vflat[:, i] for i in range(vflat.shape[1])]
+    sorted_ops = jax.lax.sort(ops, num_keys=1, is_stable=True)
+    rows_s = sorted_ops[0]
+    vals_s = jnp.stack(sorted_ops[1:], axis=1).reshape(vals.shape) \
+        if vflat.shape[1] else vals
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), rows_s[:-1]])
+    newgrp = (rows_s != prev) & (rows_s != SENTINEL)
+    gid = jnp.cumsum(newgrp.astype(jnp.int32)) - 1
+    ngrp = jnp.maximum(gid[-1] + 1, 0)
+    gid = jnp.where(rows_s != SENTINEL, gid, prod_cap)
+    red = segment_reduce(vals_s, gid, out_cap, sr.add, sorted_ids=True)
+    first = segment_reduce(jnp.arange(prod_cap, dtype=jnp.int32), gid, out_cap,
+                           Monoid(jnp.minimum, 2**31 - 1, "min"), sorted_ids=True)
+    valid = jnp.arange(out_cap, dtype=jnp.int32) < ngrp
+    yi = jnp.where(valid, rows_s[jnp.clip(first, 0, prod_cap - 1)], SENTINEL)
+    vdims = vals.shape[1:]
+    yv = jnp.where(valid.reshape((-1,) + (1,) * len(vdims)), red,
+                   jnp.asarray(sr.add.identity, red.dtype))
+    ok = ok & (ngrp <= out_cap)
+    return (yi, yv, jnp.minimum(ngrp, out_cap).astype(jnp.int32)), ok
+
+
+def spmspv_spa(a: COO, xi, xv, xnnz, sr: Semiring = ARITHMETIC, *,
+               prod_cap: int, out_cap: int):
+    """SPA SpMSpV: dense accumulator of length m, then re-sparsify."""
+    rows, vals, nprod, ok = _expand_spmspv(a, xi, xv, xnnz, sr, prod_cap)
+    m = a.shape[0]
+    dense = _scatter_monoid(rows, vals, m, sr.add)
+    yi, yv, ynnz = spvec_from_dense(dense, out_cap, zero=sr.add.identity)
+    cnt = jnp.sum(dense != jnp.asarray(sr.add.identity, dense.dtype))
+    return (yi, yv, ynnz), ok & (cnt <= out_cap)
+
+
+def spmspv_bucket(a: COO, xi, xv, xnnz, sr: Semiring = ARITHMETIC, *,
+                  prod_cap: int, out_cap: int, nbuckets: int = 16):
+    """Propagation-blocking SpMSpV (paper's SpMSpV-Bucket, [25]/[27]).
+
+    Products are partitioned by row-bucket (radix by high bits) and each
+    bucket is accumulated in its own bucket-local SPA slice; the bucket pass
+    converts random scatter over m rows into nbuckets streaming passes over
+    m/nbuckets-wide windows (the TPU analogue keeps each window VMEM-sized).
+    """
+    rows, vals, nprod, ok = _expand_spmspv(a, xi, xv, xnnz, sr, prod_cap)
+    m = a.shape[0]
+    bwidth = -(-m // nbuckets)
+    bucket = jnp.where(rows != SENTINEL, rows // bwidth, nbuckets)
+    # radix-partition products by bucket id (stable keeps row order within)
+    vflat = vals.reshape(prod_cap, -1)
+    ops = [bucket.astype(jnp.int32), rows] + \
+        [vflat[:, i] for i in range(vflat.shape[1])]
+    sorted_ops = jax.lax.sort(ops, num_keys=1, is_stable=True)
+    rows_s = sorted_ops[1]
+    vals_s = jnp.stack(sorted_ops[2:], axis=1).reshape(vals.shape) \
+        if vflat.shape[1] else vals
+    # each bucket's SPA is a slice of the length-m accumulator; because the
+    # products are already bucket-contiguous the scatter within a bucket
+    # touches only its window
+    dense = _scatter_monoid(rows_s, vals_s, m, sr.add)
+    yi, yv, ynnz = spvec_from_dense(dense, out_cap, zero=sr.add.identity)
+    cnt = jnp.sum(dense != jnp.asarray(sr.add.identity, dense.dtype))
+    return (yi, yv, ynnz), ok & (cnt <= out_cap)
+
+
+def _scatter_monoid(rows, vals, m, add: Monoid):
+    vdims = vals.shape[1:]
+    out = jnp.full((m,) + vdims, add.identity, vals.dtype)
+    rr = jnp.where(rows == SENTINEL, jnp.int32(2**31 - 1), rows)
+    if add.tag == "sum":
+        vm = (rows != SENTINEL).reshape((-1,) + (1,) * len(vdims))
+        vals = jnp.where(vm, vals, jnp.zeros((), vals.dtype))
+        return out.at[rr].add(vals, mode="drop")
+    if add.tag == "min":
+        return out.at[rr].min(vals, mode="drop")
+    if add.tag == "max":
+        return out.at[rr].max(vals, mode="drop")
+    ids = jnp.where(rows == SENTINEL, m, rows)
+    return segment_reduce(vals, ids, m, add)
+
+
+SPMSPV_VARIANTS = {
+    "sort": spmspv_sort,
+    "spa": spmspv_spa,
+    "bucket": spmspv_bucket,
+}
+
+
+def spmspv_auto(a: COO, xi, xv, xnnz, sr: Semiring = ARITHMETIC, *,
+                prod_cap: int, out_cap: int):
+    """Fig-3 rule of thumb: sort below ~0.5% vector density, bucket to ~10%,
+    SPA above (paper §4.5). Density resolved at runtime via lax.cond."""
+    n = a.shape[1]
+    density = xnnz.astype(jnp.float32) / max(n, 1)
+
+    def lo(_):
+        return spmspv_sort(a, xi, xv, xnnz, sr, prod_cap=prod_cap,
+                           out_cap=out_cap)
+
+    def mid(_):
+        return spmspv_bucket(a, xi, xv, xnnz, sr, prod_cap=prod_cap,
+                             out_cap=out_cap)
+
+    def hi(_):
+        return spmspv_spa(a, xi, xv, xnnz, sr, prod_cap=prod_cap,
+                          out_cap=out_cap)
+
+    return jax.lax.cond(
+        density < 0.005, lo,
+        lambda _: jax.lax.cond(density < 0.10, mid, hi, None), None)

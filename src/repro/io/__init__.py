@@ -1,0 +1,5 @@
+"""repro.io — parallel I/O (paper §6) and graph generators."""
+from .mmio import read_mm_parallel, write_mm_parallel, read_mm_header
+from .labelio import read_generalized_tuples
+from .binio import read_binary, write_binary
+from .rmat import rmat_edges, rmat_coo

@@ -1,0 +1,67 @@
+"""CombBLAS-style proprietary binary format (paper §6).
+
+Layout: 32-byte header (magic, version, m, n, nnz, value dtype code) followed
+by contiguous int64 rows, int64 cols, and values. Reads/writes are
+memory-mapped and chunked across workers — the binary baseline for the
+Table 5 I/O benchmark.
+"""
+from __future__ import annotations
+
+import os
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+MAGIC = 0x434242494F31      # "CBBIO1"
+_DTYPES = {0: np.float64, 1: np.float32, 2: np.int64, 3: np.int32}
+_CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+def write_binary(path: str, shape, rows, cols, vals, nwriters: int = 4):
+    m, n = shape
+    nnz = len(rows)
+    vals = np.asarray(vals)
+    code = _CODES[vals.dtype]
+    header = np.array([MAGIC, 1, m, n, nnz, code], np.int64)
+    rows64 = np.asarray(rows, np.int64)
+    cols64 = np.asarray(cols, np.int64)
+    with open(path, "wb") as f:
+        f.write(header.tobytes())
+        total = nnz * (16 + vals.itemsize)
+        f.truncate(48 + total)
+    mm = np.memmap(path, np.uint8, "r+", offset=48)
+    r_view = mm[: nnz * 8].view(np.int64)
+    c_view = mm[nnz * 8: nnz * 16].view(np.int64)
+    v_view = mm[nnz * 16:].view(vals.dtype)
+
+    def put(i):
+        s = slice(nnz * i // nwriters, nnz * (i + 1) // nwriters)
+        r_view[s] = rows64[s]
+        c_view[s] = cols64[s]
+        v_view[s] = vals[s]
+
+    with ThreadPoolExecutor(nwriters) as ex:
+        list(ex.map(put, range(nwriters)))
+    mm.flush()
+
+
+def read_binary(path: str, nreaders: int = 4):
+    header = np.fromfile(path, np.int64, 6)
+    if header[0] != MAGIC:
+        raise ValueError("bad magic")
+    _, _, m, n, nnz, code = (int(x) for x in header)
+    dtype = _DTYPES[code]
+    mm = np.memmap(path, np.uint8, "r", offset=48)
+    rows = np.empty(nnz, np.int64)
+    cols = np.empty(nnz, np.int64)
+    vals = np.empty(nnz, dtype)
+
+    def get(i):
+        s = slice(nnz * i // nreaders, nnz * (i + 1) // nreaders)
+        rows[s] = mm[: nnz * 8].view(np.int64)[s]
+        cols[s] = mm[nnz * 8: nnz * 16].view(np.int64)[s]
+        vals[s] = mm[nnz * 16:].view(dtype)[s]
+
+    with ThreadPoolExecutor(nreaders) as ex:
+        list(ex.map(get, range(nreaders)))
+    return (m, n), rows, cols, vals

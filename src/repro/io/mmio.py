@@ -1,0 +1,125 @@
+"""Parallel Matrix Market I/O (paper §6, ParallelReadMM).
+
+The paper's reader: processor p_i seeks to ``filesize·i/|P|``, fast-forwards
+to the next newline, and parses until its end boundary, finishing any line
+it started (the next reader skips its leading partial line). Writing: rank 0
+emits the header; every rank serializes its local nonzeros to a byte stream
+and the streams land at precomputed offsets (the collective MPI-IO pattern).
+
+Here "processors" are reader workers (threads); the byte-range splitting
+logic is identical to the MPI-IO version and is what the Table 5 benchmark
+measures.
+"""
+from __future__ import annotations
+
+import os
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+
+def read_mm_header(path: str):
+    """Parse the MatrixMarket banner + size line."""
+    with open(path, "rb") as f:
+        banner = f.readline().decode()
+        if not banner.startswith("%%MatrixMarket"):
+            raise ValueError("not a MatrixMarket file")
+        toks = banner.strip().split()
+        field, symmetry = toks[3], toks[4]
+        line = f.readline().decode()
+        while line.startswith("%"):
+            line = f.readline().decode()
+        m, n, nnz = (int(t) for t in line.split())
+        return dict(field=field, symmetry=symmetry, m=m, n=n, nnz=nnz,
+                    body_offset=f.tell())
+
+
+def _parse_text(text: str, pattern: bool):
+    if not text.strip():
+        return (np.empty(0, np.int64), np.empty(0, np.int64),
+                np.empty(0, np.float64))
+    width = 2 if pattern else 3
+    d = np.array(text.split(), dtype=np.float64).reshape(-1, width)
+    vals = np.ones(len(d), np.float64) if pattern else d[:, 2]
+    return (d[:, 0].astype(np.int64) - 1, d[:, 1].astype(np.int64) - 1, vals)
+
+
+def _read_chunk(path, start, end, body0, pattern):
+    """Read complete lines whose start lies in [start, end)."""
+    with open(path, "rb") as f:
+        f.seek(start)
+        if start > body0:
+            f.readline()            # partial line owned by the predecessor
+        pos = f.tell()
+        if pos >= end:
+            return _parse_text("", pattern)
+        buf = f.read(end - pos)
+        tail = f.readline()         # finish the straddling line
+        if tail:
+            buf += tail
+    return _parse_text(buf.decode(), pattern)
+
+
+def read_mm_parallel(path: str, nreaders: int = 4):
+    """Parallel MatrixMarket read → (shape, rows, cols, vals) int64 global."""
+    hdr = read_mm_header(path)
+    size = os.path.getsize(path)
+    body0 = hdr["body_offset"]
+    pattern = hdr["field"] == "pattern"
+    bounds = [body0 + (size - body0) * i // nreaders
+              for i in range(nreaders + 1)]
+
+    def work(i):
+        return _read_chunk(path, bounds[i], bounds[i + 1], body0, pattern)
+
+    if nreaders == 1:
+        parts = [work(0)]
+    else:
+        with ThreadPoolExecutor(nreaders) as ex:
+            parts = list(ex.map(work, range(nreaders)))
+    rows = np.concatenate([p[0] for p in parts])
+    cols = np.concatenate([p[1] for p in parts])
+    vals = np.concatenate([p[2] for p in parts])
+    if hdr["symmetry"] == "symmetric":
+        off = rows != cols
+        rows, cols, vals = (np.concatenate([rows, cols[off]]),
+                            np.concatenate([cols, rows[off]]),
+                            np.concatenate([vals, vals[off]]))
+    return (hdr["m"], hdr["n"]), rows, cols, vals
+
+
+def write_mm_parallel(path: str, shape, rows, cols, vals, nwriters: int = 4,
+                      field: str = "real"):
+    """Parallel MatrixMarket write (precomputed-offset collective pattern)."""
+    m, n = shape
+    nnz = len(rows)
+    header = (f"%%MatrixMarket matrix coordinate {field} general\n"
+              f"{m}\t{n}\t{nnz}\n").encode()
+    slices = [slice(nnz * i // nwriters, nnz * (i + 1) // nwriters)
+              for i in range(nwriters)]
+
+    def serialize(i):
+        s = slices[i]
+        if field == "pattern":
+            lines = [f"{r + 1}\t{c + 1}\n" for r, c in zip(rows[s], cols[s])]
+        else:
+            lines = [f"{r + 1}\t{c + 1}\t{v:.10g}\n"
+                     for r, c, v in zip(rows[s], cols[s], vals[s])]
+        return "".join(lines).encode()
+
+    with ThreadPoolExecutor(nwriters) as ex:
+        streams = list(ex.map(serialize, range(nwriters)))
+    offsets = [len(header)]
+    for st in streams[:-1]:
+        offsets.append(offsets[-1] + len(st))
+    with open(path, "wb") as f:
+        f.write(header)
+        f.truncate(offsets[-1] + len(streams[-1]))
+
+    def put(i):
+        with open(path, "r+b") as f:
+            f.seek(offsets[i])
+            f.write(streams[i])
+
+    with ThreadPoolExecutor(nwriters) as ex:
+        list(ex.map(put, range(nwriters)))

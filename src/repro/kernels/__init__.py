@@ -1,0 +1,19 @@
+"""repro.kernels — Pallas TPU kernels for the compute hot-spots.
+
+Kernels (each validated in interpret mode against the pure-jnp oracle in
+ref.py; on-TPU they are swapped in via ops.py):
+
+  semiring_matmul  dense-tile semiring contraction — the TPU realization of
+                   the paper's "hash-table" local SpGEMM accumulator
+                   (DESIGN.md §4.2): MXU path for (+,×), VPU path for
+                   min-plus / max-min / or-and
+  bsr_spmm         block-sparse (ELL-blocked) × dense SpMM — the paper's
+                   SpMM offload (§5) and the MoE grouped-matmul engine
+  flash_attention  causal online-softmax attention (prefill hot-spot)
+  ssd_chunk        Mamba2 SSD intra-chunk quadratic kernel
+
+The paper's GPU offload policy (§5: "devices handle local multiplies, host
+handles communication/merge; arithmetic-semiring only on device") maps to:
+XLA handles collectives + sparse merges, these kernels handle dense-tile
+contractions; non-jnp-expressible semirings fall back to the pure-JAX path.
+"""

@@ -1,0 +1,50 @@
+"""jit'd dispatch wrappers: Pallas kernel on TPU, oracle elsewhere.
+
+``use_pallas=None`` auto-detects the backend. CPU runs use interpret mode
+only in tests (it is a correctness tool, not a fast path).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .bsr_spmm import bsr_spmm as _bsr_pallas, to_blocked_ell
+from .flash_attention import flash_attention as _fa_pallas
+from .semiring_matmul import semiring_matmul as _sm_pallas
+from .ssd_chunk import ssd_chunk as _ssd_pallas
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def semiring_matmul(a, b, kind="plus_times", use_pallas=None, **kw):
+    if use_pallas or (use_pallas is None and _on_tpu()):
+        return _sm_pallas(a, b, kind=kind, interpret=not _on_tpu(), **kw)
+    return ref.semiring_matmul(a, b, kind)
+
+
+def bsr_spmm(block_cols, block_vals, x, use_pallas=None, **kw):
+    if use_pallas or (use_pallas is None and _on_tpu()):
+        return _bsr_pallas(block_cols, block_vals, x,
+                           interpret=not _on_tpu(), **kw)
+    return ref.bsr_spmm(block_cols, block_vals, x, x.shape[0])
+
+
+def flash_attention(q, k, v, causal=True, use_pallas=None, **kw):
+    if use_pallas or (use_pallas is None and _on_tpu()):
+        return _fa_pallas(q, k, v, causal=causal, interpret=not _on_tpu(),
+                          **kw)
+    return ref.flash_attention(q, k, v, causal)
+
+
+def ssd_chunk(xc, dtc, A, Bc, Cc, use_pallas=None, **kw):
+    if use_pallas or (use_pallas is None and _on_tpu()):
+        return _ssd_pallas(xc, dtc, A, Bc, Cc, interpret=not _on_tpu(), **kw)
+    import jax.numpy as jnp
+    ys, sts = [], []
+    for g in range(xc.shape[0]):
+        y, st = ref.ssd_chunk_diag(xc[g], dtc[g], A, Bc[g], Cc[g])
+        ys.append(y)
+        sts.append(st)
+    return jnp.stack(ys), jnp.stack(sts)

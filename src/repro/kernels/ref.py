@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------- semiring matmul ----------------
+
+def semiring_matmul(a, b, kind: str = "plus_times"):
+    """C[i,j] = add_k mul(a[i,k], b[k,j]) for the supported kernel algebras."""
+    if kind == "plus_times":
+        return a @ b
+    if kind == "min_plus":
+        return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+    if kind == "max_min":
+        return jnp.max(jnp.minimum(a[:, :, None], b[None, :, :]), axis=1)
+    if kind == "or_and":
+        return jnp.any(a[:, :, None] & b[None, :, :], axis=1)
+    raise ValueError(kind)
+
+
+# ---------------- blocked-ELL SpMM ----------------
+
+def bsr_spmm(block_cols, block_vals, x, n_cols: int):
+    """y = A @ x for A in blocked-ELL format.
+
+    block_cols: (R, K) int32 — block-column index of each stored block of
+                block-row r, -1 = padding.
+    block_vals: (R, K, bm, bk) — the dense blocks.
+    x: (n_cols, n) dense.   Returns (R*bm, n).
+    """
+    R, K, bm, bk = block_vals.shape
+    n = x.shape[1]
+    y = jnp.zeros((R, bm, n), jnp.promote_types(block_vals.dtype, x.dtype))
+    for k in range(K):
+        cols = block_cols[:, k]                       # (R,)
+        xb = x.reshape(-1, bk, n)[jnp.clip(cols, 0, x.shape[0] // bk - 1)]
+        contrib = jnp.einsum("rmk,rkn->rmn", block_vals[:, k], xb)
+        y = y + jnp.where((cols >= 0)[:, None, None], contrib, 0)
+    return y.reshape(R * bm, n)
+
+
+# ---------------- flash attention ----------------
+
+def flash_attention(q, k, v, causal: bool = True):
+    """Reference softmax attention. q/k/v: (B, S, H, d)."""
+    B, S, H, d = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd",
+                      p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------- SSD intra-chunk ----------------
+
+def ssd_chunk_diag(xc, dtc, A, Bc, Cc):
+    """Intra-chunk SSD contribution (one chunk).
+
+    xc: (q, H, P); dtc: (q, H); A: (H,); Bc, Cc: (q, N).
+    Returns (y_diag (q, H, P), state (H, P, N)).
+    """
+    q = xc.shape[0]
+    dA = dtc * A[None, :]                          # (q, H)
+    dA_cum = jnp.cumsum(dA, axis=0)
+    seg = dA_cum[:, None, :] - dA_cum[None, :, :]  # (q, q, H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(causal[:, :, None], jnp.exp(seg), 0.0)
+    scores = Cc @ Bc.T                             # (q, q)
+    y = jnp.einsum("qk,qkh,kh,khp->qhp", scores, L, dtc, xc)
+    decay_last = jnp.exp(dA_cum[-1:, :] - dA_cum)  # (q, H)
+    state = jnp.einsum("kn,kh,kh,khp->hpn", Bc, decay_last, dtc, xc)
+    return y, state

@@ -1,0 +1,63 @@
+"""Elastic scaling + failure handling (DESIGN.md §8, 1000+-node design).
+
+The mechanisms (all testable on CPU):
+  1. mesh-independent checkpoints: restore onto ANY mesh/plan
+     (``reshard_restore``; tested across mesh shapes in
+     tests/test_checkpoint.py)
+  2. deterministic data: batch(step) is pure — recovery replays exactly
+  3. StepWatchdog: wall-time budget per step; a straggling step raises
+     after ``grace`` multiples of the trailing median, letting the
+     launcher re-slice onto a hot spare (on real fleets the watchdog also
+     feeds the preemption signal)
+
+Operational story for real pods: the launcher (train.py) runs under a
+process supervisor; on a node failure jax.distributed re-initializes with
+the surviving hosts, make_production_mesh() builds the smaller mesh, and
+reshard_restore() continues from the last step — only in-flight steps are
+lost, and loss curves are bitwise-continuous thanks to (2).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+
+from ..train.checkpoint import latest_step, restore_checkpoint
+
+
+def reshard_restore(ckpt_dir: str, like, *, mesh=None, specs=None,
+                    step: Optional[int] = None):
+    """Restore a checkpoint onto a (possibly different) mesh/plan."""
+    return restore_checkpoint(ckpt_dir, like, step=step, mesh=mesh,
+                              specs=specs)
+
+
+class StepWatchdog:
+    """Detects straggling steps by trailing-median wall time."""
+
+    def __init__(self, grace: float = 3.0, window: int = 20,
+                 min_samples: int = 5):
+        self.grace = grace
+        self.times: deque = deque(maxlen=window)
+        self.min_samples = min_samples
+        self._t0 = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self) -> float:
+        dt = time.monotonic() - self._t0
+        self.times.append(dt)
+        return dt
+
+    def budget(self) -> Optional[float]:
+        if len(self.times) < self.min_samples:
+            return None
+        med = sorted(self.times)[len(self.times) // 2]
+        return med * self.grace
+
+    def is_straggling(self, elapsed: float) -> bool:
+        b = self.budget()
+        return b is not None and elapsed > b

@@ -1,0 +1,47 @@
+"""Production meshes — CombBLAS grids for the LM stack (DESIGN.md §5).
+
+  single-pod: (data=16, model=16)        = the paper's √p×√p 2D grid
+  multi-pod : (pod=2, data=16, model=16) = the paper's c×√(p/c)×√(p/c) 3D
+              CA grid; 'pod' is the layer axis (hierarchical collectives).
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before any device query).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for the production mesh, have "
+            f"{len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"(launch/dryrun.py does this for you)")
+    return jax.make_mesh(
+        shape, axes, devices=devices[:ndev],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_plan(cfg, *, multi_pod: bool = False, shape_kind: str = "train",
+              batch: int = 0, seq_parallel: bool = False, mesh=None,
+              moe_ep: bool = False):
+    """ShardingPlan matched to (mesh, arch, shape)."""
+    from ..dist.shardings import ShardingPlan
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    dp_size = 32 if multi_pod else 16
+    context_parallel = shape_kind == "decode" and batch < dp_size
+    return ShardingPlan(
+        dp_axes=dp_axes, model_axis="model", model_size=16,
+        fsdp_axes=("data",),          # params sharded within a pod; the pod
+        # axis is pure DP with hierarchical grad reduction (see DESIGN §5)
+        seq_parallel=seq_parallel,
+        context_parallel=context_parallel,
+        dp_size=dp_size, moe_ep=moe_ep, mesh=mesh)

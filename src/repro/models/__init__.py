@@ -1,0 +1,3 @@
+"""repro.models — composable LM architectures (pillar B, DESIGN.md §5)."""
+from .config import ModelConfig
+from .model import Model, init_params, init_param_specs

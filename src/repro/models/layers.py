@@ -1,0 +1,612 @@
+"""Model layers: norms, RoPE/M-RoPE, GQA + MLA attention, MLP, MoE, Mamba2.
+
+Pure functions over explicit param pytrees (no framework). Sharding is
+GSPMD-driven: ``shard_activations`` inserts with_sharding_constraint at
+block boundaries; parameter shardings live in repro/dist/shardings.py.
+
+MoE dispatch is the paper's technique as a first-class feature
+(DESIGN.md §5): the router's top-k choices form a block-sparse
+tokens→(expert, slot) assignment computed with the same radix-bucketing
+used by the sparse library's all-to-all routing; expert FFNs are a
+block-diagonal SpMM (grouped matmul, kernels/bsr_spmm.py on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+
+Array = jax.Array
+
+
+def constrain(x, spec: Optional[P]):
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except ValueError:
+        return x                         # outside jit/mesh context
+
+
+# --------------------------------------------------------------------------
+# norms / rope
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: Array, w: Array, eps: float) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    nrm = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (nrm * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: Array, pos: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); pos: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs    # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, pos3: Array, theta: float,
+                sections: tuple[int, ...]) -> Array:
+    """Qwen2-VL multimodal RoPE. pos3: (3, B, S) (t, h, w) positions;
+    ``sections`` splits the hd/2 frequency slots across the three axes."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang_all = pos3[..., None].astype(jnp.float32) * freqs  # (3, B, S, hd/2)
+    # pick which of t/h/w drives each frequency slot
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=hd // 2)    # (hd/2,)
+    ang = jnp.squeeze(
+        jnp.take_along_axis(ang_all.transpose(1, 2, 3, 0),
+                            sec_id[None, None, :, None], axis=-1), -1)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA), chunked-causal softmax (flash-style, pure JAX)
+# --------------------------------------------------------------------------
+
+def _chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                       kv_chunk: int = 1024) -> Array:
+    """Online-softmax attention, O(S·chunk) memory (B, S, H, hd inputs).
+
+    The TPU production path is kernels/flash_attention.py; this pure-JAX
+    twin keeps the same blocking so the dry-run HLO reflects the real
+    memory behavior. Block-causal: key blocks strictly above the diagonal
+    are skipped inside the scan via masking of the running maximum.
+    """
+    B, S, H, hd = q.shape
+    Skv = k.shape[1]
+    kvh = k.shape[2]
+    dv = v.shape[-1]                 # may differ from hd (MLA: 192 vs 128)
+    rep = H // kvh
+    scale = 1.0 / np.sqrt(hd)
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, Skv)
+    nq = -(-S // q_chunk)
+    nk = -(-Skv // kv_chunk)
+    q = q.reshape(B, nq, q_chunk, H, hd)
+
+    def q_block(qi, qc):
+        # qc: (B, q_chunk, H, hd)
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_block(carry, ki):
+            m, l, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            vs = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            ks = jnp.repeat(ks, rep, axis=2)
+            vs = jnp.repeat(vs, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, ks,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isinf(m_new)[..., None], 0.0, p)
+            corr = jnp.where(jnp.isinf(m), jnp.zeros_like(m),
+                             jnp.exp(m - m_safe))
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vs.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, qc, H, hd)
+
+    out = jax.lax.map(lambda args: q_block(*args),
+                      (jnp.arange(nq), q.transpose(1, 0, 2, 3, 4)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dv)
+
+
+def attention(q, k, v, *, causal: bool, chunked: bool = None) -> Array:
+    """q: (B,S,H,hd), k/v: (B,Skv,KVH,hd) → (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    Skv, kvh = k.shape[1], k.shape[2]
+    if chunked is None:
+        chunked = S * Skv > 4096 * 4096
+    if chunked and S > 1:
+        return _chunked_attention(q, k, v, causal=causal)
+    rep = H // kvh
+    ks = jnp.repeat(k, rep, axis=2)
+    vs = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, ks,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    if causal and S > 1:
+        mask = jnp.tril(jnp.ones((S, Skv), bool), k=Skv - S)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), vs)
+    return out.astype(q.dtype)
+
+
+def gqa_block(x, params, cfg: ModelConfig, pos, *, cache=None,
+              pos3=None) -> tuple[Array, Any]:
+    """GQA attention sublayer. cache: None (train/prefill) or
+    dict(k, v, offset) for decode. Returns (out, new_cache)."""
+    B, S, D = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KVH, hd)
+    v = v.reshape(B, S, KVH, hd)
+    if cfg.mrope_sections is not None and pos3 is not None:
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                 k.astype(cache["k"].dtype),
+                                                 cache["offset"], axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                 v.astype(cache["v"].dtype),
+                                                 cache["offset"], axis=1)
+        new_cache = dict(k=ck, v=cv, offset=cache["offset"] + S)
+        k, v = ck, cv
+        # decode attends to all cached positions < offset+S
+        out = _decode_attention(q, k, v, cache["offset"] + S)
+    else:
+        out = attention(q, k, v, causal=cfg.causal)
+    out = out.reshape(B, S, H * hd) @ params["wo"]
+    return out, new_cache
+
+
+def _decode_attention(q, k, v, valid_len):
+    """Query attention over a (possibly padded) cache, causal w.r.t. the
+    absolute query positions (prefill chunks stay causal).
+
+    Grouped-GQA formulation: query heads are reshaped to (kv_head, group)
+    and contracted against the UN-replicated cache — no jnp.repeat
+    materialization (8× KV traffic for 64q/8kv), and with the cache
+    sequence-sharded the softmax reductions cross shards as tiny
+    all-reduces instead of cache all-gathers (§Perf cell C).
+    """
+    B, S, H, hd = q.shape
+    kvh = k.shape[2]
+    rep = H // kvh
+    dv = v.shape[-1]
+    qg = q.reshape(B, S, kvh, rep, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    kpos = jnp.arange(k.shape[1])
+    qpos = valid_len - S + jnp.arange(S)          # absolute query positions
+    mask = kpos[None, :] <= qpos[:, None]         # (S, Skv)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(B, S, kvh * rep, dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# --------------------------------------------------------------------------
+
+def mla_block(x, params, cfg: ModelConfig, pos, *, cache=None):
+    """MLA: KV compressed to a kv_lora_rank latent (+ shared rope key).
+
+    Cache stores only (c_kv, k_rope): the paper-matching memory win
+    (kv_lora 512 + rope 64 per token instead of 2·H·hd).
+    """
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dq = cfg.qk_nope_dim + cfg.qk_rope_dim
+    q = (x @ params["wq"]).reshape(B, S, H, dq)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    # compressed kv latent + shared rope key
+    ckv = x @ params["w_dkv"]                       # (B,S,lora+rope)
+    c_kv, k_rope = jnp.split(ckv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, params["kv_ln"], cfg.rms_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        c_kv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cache["offset"],
+            axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            cache["offset"], axis=1)
+        new_cache = dict(c_kv=c_kv, k_rope=k_rope,
+                         offset=cache["offset"] + S)
+        valid = cache["offset"] + S
+    else:
+        valid = None
+    # up-project keys/values from the latent
+    wkv = params["w_ukv"].reshape(cfg.kv_lora_rank, H,
+                                  cfg.qk_nope_dim + cfg.v_head_dim)
+    kv = jnp.einsum("bsl,lhe->bshe", c_kv, wkv)
+    k_nope, vv = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] +
+                                  (cfg.qk_rope_dim,))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    if cache is not None:
+        out = _decode_attention(q_full, k_full, vv, valid)
+    else:
+        out = attention(q_full, k_full, vv, causal=cfg.causal)
+    out = out.reshape(B, S, H * cfg.v_head_dim) @ params["wo"]
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP / MoE
+# --------------------------------------------------------------------------
+
+def mlp_block(x, params, cfg: ModelConfig) -> Array:
+    if cfg.mlp_act == "gelu":
+        return jax.nn.gelu(x @ params["w1"]) @ params["w2"]
+    return (jax.nn.silu(x @ params["wg"]) * (x @ params["w1"])) @ params["w2"]
+
+
+def _expert_ffn(xe, wg, w1, w2):
+    """xe: (E, C, D); w*: (E, D, F)/(E, F, D) — block-diagonal grouped
+    matmul (the bsr_spmm pattern)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) * \
+        jnp.einsum("ecd,edf->ecf", xe, w1)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def moe_block(x, params, cfg: ModelConfig, *, ep_spec: Optional[P] = None):
+    """Top-k MoE with capacity-bounded sort-based dispatch (semiring-SpMM
+    formulation of the paper's machinery — DESIGN.md §5).
+
+    Returns (out, aux_loss).
+    """
+    B, S, D = x.shape
+    T = B * S
+    E = params["router"].shape[-1]      # padded for EP divisibility
+    K = cfg.top_k
+    xt = x.reshape(T, D)
+    logits = (xt @ params["router"]).astype(jnp.float32)     # (T, E)
+    if E > cfg.n_experts:               # mask padding experts
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)            # (T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True),
+                                        1e-9)
+    # aux load-balancing loss (Switch-style)
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        jnp.ones((T * K,), jnp.float32)) / (T * K)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- dispatch: the sparse tokens×experts matrix, radix-bucketed ----
+    C = int(cfg.capacity_factor * T * K / E + 0.999)
+    C = max(8, min(C, T))
+    flat_e = gate_idx.reshape(-1)                            # (T·K,)
+    order = jnp.argsort(flat_e, stable=True)                 # bucket by expert
+    e_sorted = flat_e[order]
+    seg = jnp.searchsorted(e_sorted, jnp.arange(E + 1)).astype(jnp.int32)
+    within = jnp.arange(T * K, dtype=jnp.int32) - e_sorted_start(seg, e_sorted)
+    keep = within < C
+    slot = jnp.where(keep, e_sorted * C + within, E * C)     # OOB drop
+    tok_of = order // K
+    xe = jnp.zeros((E * C, D), x.dtype).at[slot].set(
+        xt[tok_of], mode="drop").reshape(E, C, D)
+    gates = jnp.zeros((E * C,), jnp.float32).at[slot].set(
+        gate_vals.reshape(-1)[order], mode="drop").reshape(E, C)
+    xe = constrain(xe, ep_spec)
+    ye = _expert_ffn(xe, params["we_g"], params["we_1"], params["we_2"])
+    ye = constrain(ye, ep_spec)
+    # combine: y[t] += gate · ye[slot(t)]  (the transpose SpMM)
+    ye_flat = (ye.reshape(E * C, D) *
+               gates.reshape(E * C, 1).astype(ye.dtype))
+    contrib = ye_flat[jnp.clip(slot, 0, E * C - 1)]          # (T·K, D)
+    contrib = jnp.where(keep[:, None], contrib, 0)
+    y = jnp.zeros((T, D), ye.dtype).at[tok_of].add(contrib)
+    if cfg.n_shared_experts:
+        y = y + _shared_experts(xt, params).astype(y.dtype)
+    return y.reshape(B, S, D).astype(x.dtype), aux
+
+
+def _shared_experts(xt, params):
+    """Σ_s FFN_s(x) == ONE dense FFN with F-concatenated weights — a plain
+    column→row-parallel pair that GSPMD shards like any MLP (a per-expert
+    einsum over a broadcast token axis defeats the partitioner and
+    replicates all tokens — measured in §Perf cell A iteration 3)."""
+    Ns, D, F = params["ws_g"].shape
+    wsg = params["ws_g"].transpose(1, 0, 2).reshape(D, Ns * F)
+    ws1 = params["ws_1"].transpose(1, 0, 2).reshape(D, Ns * F)
+    ws2 = params["ws_2"].reshape(Ns * F, D)
+    h = jax.nn.silu(xt @ wsg) * (xt @ ws1)
+    return h @ ws2
+
+
+def e_sorted_start(seg, e_sorted):
+    return seg[jnp.clip(e_sorted, 0, seg.shape[0] - 2)]
+
+
+def moe_block_ep(x, params, cfg: ModelConfig, plan) -> tuple[Array, Array]:
+    """Expert-parallel MoE via shard_map (the paper's technique, first
+    class — DESIGN.md §5).
+
+    The GSPMD formulation (moe_block) scatters tokens into an (E, C, D)
+    buffer with data-dependent indices; the partitioner cannot shard a
+    data-dependent scatter and replicates the dispatch buffers
+    (≈E·C·D bytes of all-gather per layer — measured in §Perf cell A).
+    Here dispatch is an explicit bulk-synchronous exchange, exactly the
+    sparse library's routing discipline:
+
+      per dp-shard: top-k route → radix-bucket local tokens by expert
+      (tokens×experts sparse matrix, fixed capacity) → all-to-all over the
+      TP axis (experts are sharded there) → local grouped FFN (the
+      block-diagonal SpMM / bsr_spmm pattern) → reverse all-to-all →
+      weighted combine. On the multi-pod mesh the a2a stays pod-local
+      (reduced communicators, paper §3.3).
+    """
+    B, S, D = x.shape
+    m = plan.model_axis
+    msize = plan.model_size
+    dp = plan.dp_axes
+    E = params["router"].shape[-1]
+    K = cfg.top_k
+    E_loc = E // msize
+
+    def body(xl, router, we_g, we_1, we_2):
+        # xl: (B_loc, S, D) model-replicated; we_*: (E_loc, D, F)
+        Bl = xl.shape[0]
+        T = Bl * S
+        xt = xl.reshape(T, D)
+        logits = (xt @ router).astype(jnp.float32)
+        if E > cfg.n_experts:
+            logits = jnp.where(jnp.arange(E)[None] >= cfg.n_experts, -1e30,
+                               logits)
+        probs = jax.nn.softmax(logits, -1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, K)
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+        me = probs.mean(0)
+        ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+            jnp.ones((T * K,), jnp.float32)) / (T * K)
+        aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux, dp)   # model-invarying already
+        # ---- radix-bucket local tokens by expert (capacity-bounded) ----
+        C = max(8, min(int(cfg.capacity_factor * T * K / E + 0.999), T))
+        flat_e = gate_idx.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        e_s = flat_e[order]
+        seg = jnp.searchsorted(e_s, jnp.arange(E + 1)).astype(jnp.int32)
+        within = jnp.arange(T * K, dtype=jnp.int32) - \
+            seg[jnp.clip(e_s, 0, E - 1)]
+        keep = within < C
+        slot = jnp.where(keep, e_s * C + within, E * C)
+        tok_of = order // K
+        xe = jnp.zeros((E * C, D), xl.dtype).at[slot].set(
+            xt[tok_of], mode="drop").reshape(E, C, D)
+        # ---- expert-parallel compute --------------------------------
+        # Activations are model-replicated (Megatron TP), so every rank
+        # already HAS all tokens: slice out the locally-owned experts,
+        # compute, and psum partial outputs over the TP axis. Wire cost =
+        # one (T, D) all-reduce — identical to a dense TP MLP; no
+        # dispatch all-to-all is needed until activations become
+        # sequence-sharded (seq_parallel), where the a2a variant applies.
+        ridx = jax.lax.axis_index(m)
+        x_loc = jax.lax.dynamic_slice_in_dim(xe, ridx * E_loc, E_loc, 0)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_loc, we_g)) * \
+            jnp.einsum("ecd,edf->ecf", x_loc, we_1)
+        y_loc = jnp.einsum("ecf,efd->ecd", h, we_2)    # (E_loc, C, D)
+        # ---- combine (transpose SpMM with the gate values) ----------
+        gates = jnp.zeros((E * C,), jnp.float32).at[slot].set(
+            gate_vals.reshape(-1)[order], mode="drop")
+        gates_full = gates.reshape(E, C)
+        g_loc = jax.lax.dynamic_slice_in_dim(gates_full, ridx * E_loc,
+                                             E_loc, 0)
+        ye = (y_loc * g_loc[:, :, None].astype(y_loc.dtype)) \
+            .reshape(E_loc * C, D)
+        # local slots of my experts map back to token ids
+        slot_full = jnp.where(keep, slot, E * C)
+        my_lo = ridx * E_loc * C
+        in_mine = (slot_full >= my_lo) & (slot_full < my_lo + E_loc * C)
+        local_slot = jnp.where(in_mine, slot_full - my_lo, E_loc * C)
+        contrib = ye[jnp.clip(local_slot, 0, E_loc * C - 1)]
+        contrib = jnp.where(in_mine[:, None], contrib, 0)
+        y_part = jnp.zeros((T, D), ye.dtype).at[tok_of].add(contrib)
+        y = jax.lax.psum(y_part, m)
+        return y.reshape(Bl, S, D), aux
+
+    from jax.sharding import PartitionSpec as P
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    y, aux = jax.shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(P(dp_spec, None, None), P(None, None),
+                  P(m, None, None), P(m, None, None), P(m, None, None)),
+        out_specs=(P(dp_spec, None, None), P()),
+    )(x, params["router"], params["we_g"], params["we_1"], params["we_2"])
+    if cfg.n_shared_experts:
+        xt = x.reshape(B * S, D)
+        sh = _shared_experts(xt, params)
+        y = y + sh.reshape(B, S, D).astype(y.dtype)
+    return y.astype(x.dtype), aux
+
+
+# --------------------------------------------------------------------------
+# Mamba2 (SSD — state space duality, arXiv:2405.21060)
+# --------------------------------------------------------------------------
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P) inputs; dt: (B, S, H) ≥0 step sizes; A: (H,) < 0 decay;
+    Bm, Cm: (B, S, N) (single group). Returns (y, final_state[B,H,P,N]).
+    """
+    Bsz, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    nchunk = S // chunk
+    assert nchunk * chunk == S, (S, chunk)
+    xc = xh.reshape(Bsz, nchunk, chunk, H, Pd)
+    dtc = dt.reshape(Bsz, nchunk, chunk, H)
+    Bc = Bm.reshape(Bsz, nchunk, chunk, N)
+    Cc = Cm.reshape(Bsz, nchunk, chunk, N)
+    dA = dtc * A[None, None, None, :]                 # (B, c, q, H) ≤ 0
+    dA_cum = jnp.cumsum(dA, axis=2)                   # within-chunk cumsum
+
+    # ---- intra-chunk (quadratic, attention-like with decay kernel) ----
+    # L[q1, q2] = exp(dA_cum[q1] - dA_cum[q2]) for q1 >= q2
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)    # (B, c, q, k)
+    y_diag = jnp.einsum("bcqk,bcqkh,bckh,bckhp->bcqhp",
+                        scores, L, dtc, xc)
+
+    # ---- chunk states:  states_c = Σ_k exp(dA_cum[last]-dA_cum[k])·dt·B·x
+    decay_last = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)       # (B,c,q,H)
+    states = jnp.einsum("bckn,bckh,bckh,bckhp->bchpn",
+                        Bc, decay_last, dtc, xc)              # (B,c,H,P,N)
+
+    # ---- inter-chunk recurrence over chunk index -----------------------
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                # (B,c,H)
+
+    def step(carry, inp):
+        st_prev = carry                                       # (B,H,P,N)
+        st_c, dec_c = inp
+        new = st_prev * dec_c[:, :, None, None] + st_c
+        return new, st_prev
+
+    # SSM states are kept in f32 (the standard precision choice for the
+    # recurrence); products with bf16 inputs promote to f32 already
+    init = jnp.zeros((Bsz, H, Pd, N), states.dtype) if init_state is None \
+        else init_state.astype(states.dtype)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (B,c,H,P,N)
+
+    # ---- off-diagonal contribution: y += C · exp(dA_cum) · prev_state --
+    in_decay = jnp.exp(dA_cum)                                # (B,c,q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, in_decay, prev_states)
+    y = (y_diag + y_off).reshape(Bsz, S, H, Pd)
+    return y, final
+
+
+def ssd_decode_step(x1, dt1, A, B1, C1, state):
+    """One-token SSD recurrence. x1: (B,1,H,P); B1/C1: (B,1,N)."""
+    dA = jnp.exp(dt1[:, 0, :] * A[None, :])                   # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhpn", B1[:, 0], dt1[:, 0], x1[:, 0])
+    new_state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C1[:, 0], new_state)
+    return y[:, None], new_state
+
+
+def mamba_block(x, params, cfg: ModelConfig, *, cache=None):
+    """Mamba2 block: in_proj → short conv → SSD → gated out_proj.
+
+    cache (decode): dict(conv: (B, d_conv-1, Din+2N), state: (B,H,P,N)).
+    """
+    B, S, D = x.shape
+    Din, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    # split projections (TP-shardable individually; DESIGN.md §5)
+    z = x @ params["in_z"]                                    # (B,S,Din)
+    xbc = x @ params["in_xbc"]                                # (B,S,Din+2N)
+    dt = x @ params["in_dt"]                                  # (B,S,H)
+    new_cache = None
+    if cache is None:
+        xbc_conv = _causal_conv(xbc, params["conv_w"], cfg.d_conv)
+    else:
+        hist = jnp.concatenate([cache["conv"], xbc], axis=1)
+        xbc_conv = _causal_conv(hist, params["conv_w"],
+                                cfg.d_conv)[:, -S:]
+        new_conv = hist[:, -(cfg.d_conv - 1):]
+    xbc_conv = jax.nn.silu(xbc_conv)
+    xin, Bm, Cm = jnp.split(xbc_conv, [Din, Din + N], axis=-1)
+    xin = xin.reshape(B, S, H, Pd)
+    dt = jax.nn.softplus(dt + params["dt_bias"])              # (B,S,H)
+    A = -jnp.exp(params["A_log"])                             # (H,)
+    if cache is None:
+        chunk = min(cfg.ssm_chunk, S)
+        if S % chunk:
+            pad = chunk - S % chunk
+            y, _ = ssd_chunked(
+                jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                jnp.pad(dt, ((0, 0), (0, pad), (0, 0))), A,
+                jnp.pad(Bm, ((0, 0), (0, pad), (0, 0))),
+                jnp.pad(Cm, ((0, 0), (0, pad), (0, 0))), chunk)
+            y = y[:, :S]
+        else:
+            y, _ = ssd_chunked(xin, dt, A, Bm, Cm, chunk)
+    elif S == 1:
+        y, new_state = ssd_decode_step(xin, dt, A, Bm, Cm, cache["state"])
+        new_cache = dict(conv=new_conv, state=new_state)
+    else:
+        # prefill with cache: run the recurrence over S positions
+        def one(state, inp):
+            xt, dtt, Bt, Ct = inp
+            yt, st = ssd_decode_step(xt[:, None], dtt[:, None], A,
+                                     Bt[:, None], Ct[:, None], state)
+            return st, yt[:, 0]
+
+        st0 = cache["state"]
+        new_state, ys = jax.lax.scan(
+            one, st0, (xin.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+                       Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2)))
+        y = ys.transpose(1, 0, 2, 3)
+        new_cache = dict(conv=new_conv, state=new_state)
+    y = y + xin * params["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, Din)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"], new_cache
+
+
+def _causal_conv(x, w, width):
+    """Depthwise causal conv. x: (B, S, C); w: (width, C)."""
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for t in range(width):
+        out = out + pad[:, t:t + x.shape[1]] * w[t][None, None, :]
+    return out

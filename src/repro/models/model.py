@@ -1,0 +1,411 @@
+"""Model assembly: parameter init/specs + forward for all four families.
+
+Layer stacking: layers are grouped into *periods* — the smallest repeating
+signature of (mixer kind, is_moe) — and parameters are stacked over
+period-repeats so the whole stack lowers as ONE lax.scan (compile time and
+HLO size stay O(period), not O(L); remat wraps each period).
+
+  decoder/encoder : period 1 (uniform layers)
+  deepseek-v2-lite: period 1 (all-MoE per the assigned config)
+  jamba           : period 8 (attn at offset 4, MoE every 2nd layer)
+  mamba2          : period 1
+
+Params are plain nested dicts of jnp arrays; init is deterministic in
+(seed, path). ``abstract=True`` gives ShapeDtypeStructs (dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from . import layers as L
+
+Array = jax.Array
+
+
+def _dtype(name):
+    return dict(bfloat16=jnp.bfloat16, float32=jnp.float32,
+                float16=jnp.float16)[name]
+
+
+def vocab_padded(cfg: ModelConfig, mult: int = 256) -> int:
+    return -(-cfg.vocab // mult) * mult
+
+
+def period_of(cfg: ModelConfig) -> int:
+    sig = list(zip(cfg.layer_kinds(), cfg.layer_moe()))
+    for p in range(1, cfg.n_layers + 1):
+        if cfg.n_layers % p:
+            continue
+        if all(sig[i] == sig[i % p] for i in range(cfg.n_layers)):
+            return p
+    return cfg.n_layers
+
+
+def experts_padded(cfg: ModelConfig, mult: int = 16) -> int:
+    return -(-cfg.n_experts // mult) * mult if cfg.is_moe else 0
+
+
+# --------------------------------------------------------------------------
+# parameter construction
+# --------------------------------------------------------------------------
+
+def _layer_param_shapes(cfg: ModelConfig, kind: str, moe: bool):
+    """Shapes for one layer position (unstacked)."""
+    D = cfg.d_model
+    shapes: dict[str, tuple] = {"ln1": (D,)}
+    if kind == "attn":
+        if cfg.use_mla:
+            dq = cfg.qk_nope_dim + cfg.qk_rope_dim
+            shapes.update(
+                wq=(D, cfg.n_heads * dq),
+                w_dkv=(D, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                kv_ln=(cfg.kv_lora_rank,),
+                w_ukv=(cfg.kv_lora_rank,
+                       cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)),
+                wo=(cfg.n_heads * cfg.v_head_dim, D))
+        else:
+            hd = cfg.hd
+            shapes.update(wq=(D, cfg.n_heads * hd),
+                          wk=(D, cfg.n_kv_heads * hd),
+                          wv=(D, cfg.n_kv_heads * hd),
+                          wo=(cfg.n_heads * hd, D))
+            if cfg.qkv_bias:
+                shapes.update(bq=(cfg.n_heads * hd,),
+                              bk=(cfg.n_kv_heads * hd,),
+                              bv=(cfg.n_kv_heads * hd,))
+    else:  # mamba
+        Din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        shapes.update(in_z=(D, Din), in_xbc=(D, Din + 2 * N), in_dt=(D, H),
+                      conv_w=(cfg.d_conv, Din + 2 * N),
+                      dt_bias=(H,), A_log=(H,), D_skip=(H,),
+                      out_proj=(Din, D))
+    has_ffn = (cfg.kind != "ssm")
+    if has_ffn:
+        shapes["ln2"] = (D,)
+        if moe:
+            E = experts_padded(cfg)
+            F = cfg.d_ff
+            shapes.update(router=(D, E),
+                          we_g=(E, D, F), we_1=(E, D, F), we_2=(E, F, D))
+            if cfg.n_shared_experts:
+                Ns = cfg.n_shared_experts
+                shapes.update(ws_g=(Ns, D, F), ws_1=(Ns, D, F),
+                              ws_2=(Ns, F, D))
+        else:
+            F = cfg.d_ff
+            if cfg.mlp_act == "gelu":
+                shapes.update(w1=(D, F), w2=(F, D))
+            else:
+                shapes.update(wg=(D, F), w1=(D, F), w2=(F, D))
+    return shapes
+
+
+def param_shapes(cfg: ModelConfig):
+    """Full model parameter shape tree (stacked periods)."""
+    Vp = vocab_padded(cfg)
+    D = cfg.d_model
+    period = period_of(cfg)
+    reps = cfg.n_layers // period
+    kinds = cfg.layer_kinds()[:period]
+    moes = cfg.layer_moe()[:period]
+    blocks = {}
+    for pos in range(period):
+        lshapes = _layer_param_shapes(cfg, kinds[pos], moes[pos])
+        blocks[f"pos{pos}"] = {k: (reps,) + v for k, v in lshapes.items()}
+    tree = dict(embed=(Vp, D), final_norm=(D,), blocks=blocks)
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = (Vp, D)
+    if cfg.frontend == "vision_patches":
+        tree["vision_proj"] = (D, D)     # stub projector for patch embeds
+    if cfg.frontend == "audio_frames":
+        tree["frame_proj"] = (D, D)
+    return tree
+
+
+def _init_one(key, path: str, shape, cfg: ModelConfig):
+    pdt = _dtype(cfg.param_dtype)
+    name = path.split("/")[-1]
+    if name.startswith("ln") or name in ("final_norm", "kv_ln"):
+        return jnp.ones(shape, pdt)
+    if name == "A_log":
+        return jnp.log(jnp.linspace(1.0, 16.0, shape[-1], dtype=jnp.float32)
+                       ).astype(pdt) * jnp.ones(shape, pdt)
+    if name == "dt_bias":
+        # softplus^-1 of dt in [1e-3, 1e-1], log-spaced
+        dt = jnp.exp(jnp.linspace(math.log(1e-3), math.log(1e-1),
+                                  shape[-1], dtype=jnp.float32))
+        inv = jnp.log(jnp.expm1(dt))
+        return (inv * jnp.ones(shape, jnp.float32)).astype(pdt)
+    if name == "D_skip":
+        return jnp.ones(shape, pdt)
+    if name.startswith("b"):
+        return jnp.zeros(shape, pdt)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 0.02 if name in ("embed", "lm_head") else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(pdt)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0, abstract: bool = False):
+    shapes = param_shapes(cfg)
+    pdt = _dtype(cfg.param_dtype)
+
+    def build(tree, prefix=""):
+        out = {}
+        for k, v in tree.items():
+            path = f"{prefix}/{k}" if prefix else k
+            if isinstance(v, dict):
+                out[k] = build(v, path)
+            else:
+                if abstract:
+                    out[k] = jax.ShapeDtypeStruct(v, pdt)
+                else:
+                    key = jax.random.fold_in(
+                        jax.random.PRNGKey(seed),
+                        int.from_bytes(path.encode()[:4].ljust(4, b"x"),
+                                       "little") ^ hash(path) % (2**31))
+                    out[k] = _init_one(key, path, v, cfg)
+        return out
+
+    return build(shapes)
+
+
+def init_param_specs(cfg: ModelConfig, plan) -> Any:
+    """PartitionSpec tree matching param_shapes (see dist/shardings.py)."""
+    from ..dist.shardings import spec_for_param
+    shapes = param_shapes(cfg)
+
+    def build(tree, prefix=""):
+        out = {}
+        for k, v in tree.items():
+            path = f"{prefix}/{k}" if prefix else k
+            out[k] = build(v, path) if isinstance(v, dict) \
+                else spec_for_param(path, v, cfg, plan)
+        return out
+
+    return build(shapes)
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    plan: Any = None                     # ShardingPlan or None
+    scan_unroll: bool = False            # unroll the layer scan (dry-run
+    # depth probes: exact cost analysis needs while-free HLO)
+    cast_early: bool = False             # cast params to the compute dtype
+    # BEFORE the sharded-use boundary, so FSDP all-gathers and TP
+    # collectives move bf16 instead of f32 (§Perf iteration 1)
+
+    # ---------------- embedding / frontend ----------------
+    def embed(self, params, batch):
+        cfg = self.cfg
+        adt = _dtype(cfg.dtype)
+        if cfg.frontend == "audio_frames":
+            x = batch["features"].astype(adt) @ \
+                params["frame_proj"].astype(adt)
+            return x
+        tok = batch["tokens"]
+        x = jnp.take(params["embed"], tok, axis=0).astype(adt)
+        if cfg.frontend == "vision_patches" and "vision_embeds" in batch:
+            # (decode steps are text-only — vision enters at prefill)
+            ve = batch["vision_embeds"].astype(adt) @ \
+                params["vision_proj"].astype(adt)
+            # scatter patch embeddings over the marked positions: the stub
+            # places patch t at the t-th True position of vision_mask
+            B, S, D = x.shape
+            T = ve.shape[1]
+            vm = batch["vision_mask"]
+            rank = jnp.cumsum(vm, axis=1) - 1            # (B, S)
+            take = jnp.clip(rank, 0, T - 1)
+            ve_at = jnp.take_along_axis(ve, take[..., None], axis=1)
+            x = jnp.where(vm[..., None], ve_at, x)
+        return x
+
+    # ---------------- one layer ----------------
+    _KEEP_F32 = ("A_log", "dt_bias", "D_skip", "ln1", "ln2", "kv_ln")
+
+    def _cast_params(self, p):
+        adt = _dtype(self.cfg.dtype)
+        return {k: v if k in self._KEEP_F32 else v.astype(adt)
+                for k, v in p.items()}
+
+    def _mixer(self, x, p, kind, pos, pos3, cache):
+        cfg = self.cfg
+        if kind == "attn":
+            if cfg.use_mla:
+                return L.mla_block(x, p, cfg, pos, cache=cache)
+            return L.gqa_block(x, p, cfg, pos, cache=cache, pos3=pos3)
+        return L.mamba_block(x, p, cfg, cache=cache)
+
+    def _layer(self, x, p, kind, moe, pos, pos3, cache):
+        cfg = self.cfg
+        p = self._cast_params(p)
+        h = L.rmsnorm(x, p["ln1"], cfg.rms_eps)
+        mix, new_cache = self._mixer(h, p, kind, pos, pos3, cache)
+        x = x + mix.astype(x.dtype)
+        aux = jnp.zeros((), jnp.float32)
+        if "ln2" in p:
+            h = L.rmsnorm(x, p["ln2"], cfg.rms_eps)
+            if moe:
+                if self.plan is not None and self.plan.moe_ep and \
+                        self.plan.mesh is not None:
+                    ff, aux = L.moe_block_ep(h, p, cfg, self.plan)
+                else:
+                    ff, aux = L.moe_block(
+                        h, p, cfg,
+                        ep_spec=self.plan.ep_spec() if self.plan else None)
+            else:
+                ff = L.mlp_block(h, p, cfg)
+            x = x + ff.astype(x.dtype)
+        if self.plan is not None:
+            x = L.constrain(x, self.plan.act_spec())
+        return x, aux, new_cache
+
+    # ---------------- full stack ----------------
+    def forward(self, params, batch, *, caches=None, remat=True):
+        """Returns (logits, aux_loss, new_caches)."""
+        cfg = self.cfg
+        unroll = self.scan_unroll
+        if self.cast_early:
+            adt = _dtype(cfg.dtype)
+            params = dict(params)
+            params["blocks"] = {
+                pos: {k: (v if k in self._KEEP_F32 else v.astype(adt))
+                      for k, v in blk.items()}
+                for pos, blk in params["blocks"].items()}
+            for k in ("embed", "lm_head", "vision_proj", "frame_proj"):
+                if k in params:
+                    params[k] = params[k].astype(adt)
+        period = period_of(cfg)
+        reps = cfg.n_layers // period
+        kinds = cfg.layer_kinds()[:period]
+        moes = cfg.layer_moe()[:period]
+        x = self.embed(params, batch)
+        if self.plan is not None:
+            x = L.constrain(x, self.plan.act_spec())
+        B, S, D = x.shape
+        offset = batch.get("offset", None)
+        if offset is None:
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        else:
+            pos = offset[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+        pos3 = batch.get("pos3", None)
+
+        def superblock(x, blk_params, blk_caches):
+            aux_total = jnp.zeros((), jnp.float32)
+            new_caches = {}
+            for i, (kind, moe) in enumerate(zip(kinds, moes)):
+                c = blk_caches.get(f"pos{i}") if blk_caches else None
+                x, aux, nc = self._layer(x, blk_params[f"pos{i}"], kind, moe,
+                                         pos, pos3, c)
+                aux_total = aux_total + aux
+                if nc is not None:
+                    new_caches[f"pos{i}"] = nc
+            return x, aux_total, new_caches
+
+        if caches is None:
+            def scan_body(x, blk_params):
+                fn = superblock
+                if remat:
+                    fn = jax.checkpoint(
+                        lambda xx, pp: superblock(xx, pp, None)[:2],
+                        policy=jax.checkpoint_policies.nothing_saveable)
+                    x, aux = fn(x, blk_params)
+                else:
+                    x, aux, _ = superblock(x, blk_params, None)
+                return x, aux
+
+            x, auxs = jax.lax.scan(scan_body, x, params["blocks"],
+                                   length=reps, unroll=reps if unroll else 1)
+            aux = jnp.sum(auxs)
+            new_caches = None
+        else:
+            def scan_body(x, xs):
+                blk_params, blk_caches = xs
+                x, aux, ncs = superblock(x, blk_params, blk_caches)
+                return x, (aux, ncs)
+
+            x, (auxs, new_caches) = jax.lax.scan(
+                scan_body, x, (params["blocks"], caches), length=reps,
+                unroll=reps if unroll else 1)
+            aux = jnp.sum(auxs)
+
+        x = L.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+        head = params.get("lm_head", params["embed"])
+        logits = x @ head.T.astype(x.dtype)
+        if self.plan is not None:
+            logits = L.constrain(logits, self.plan.logits_spec())
+        return logits, aux, new_caches
+
+    # ---------------- losses ----------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        logits, aux, _ = self.forward(params, batch)
+        Vp = logits.shape[-1]
+        if cfg.kind == "encoder":
+            labels = batch["targets"]
+            mask = batch["mask"].astype(jnp.float32)
+        else:
+            labels = batch["labels"]
+            mask = (labels >= 0).astype(jnp.float32)
+        labels = jnp.maximum(labels, 0)
+        lz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+        nll = (lz - gold) * mask
+        ntok = jnp.maximum(mask.sum(), 1.0)
+        return nll.sum() / ntok + aux, dict(
+            nll=nll.sum() / ntok, aux=aux, ntok=ntok)
+
+    # ---------------- kv / state caches ----------------
+    def init_cache(self, batch_size: int, max_len: int, abstract=False,
+                   dtype=None):
+        """Stacked cache pytree matching forward(caches=...) layout."""
+        cfg = self.cfg
+        dt = dtype or _dtype(cfg.dtype)
+        period = period_of(cfg)
+        reps = cfg.n_layers // period
+        kinds = cfg.layer_kinds()[:period]
+
+        def mk(shape, dtyp=None):
+            d = dtyp or dt
+            if abstract:
+                return jax.ShapeDtypeStruct(shape, d)
+            return jnp.zeros(shape, d)
+
+        caches = {}
+        for i, kind in enumerate(kinds):
+            if kind == "attn":
+                if cfg.use_mla:
+                    c = dict(
+                        c_kv=mk((reps, batch_size, max_len,
+                                 cfg.kv_lora_rank)),
+                        k_rope=mk((reps, batch_size, max_len, 1,
+                                   cfg.qk_rope_dim)),
+                        offset=mk((reps,), jnp.int32))
+                else:
+                    c = dict(
+                        k=mk((reps, batch_size, max_len, cfg.n_kv_heads,
+                              cfg.hd)),
+                        v=mk((reps, batch_size, max_len, cfg.n_kv_heads,
+                              cfg.hd)),
+                        offset=mk((reps,), jnp.int32))
+            else:
+                c = dict(
+                    conv=mk((reps, batch_size, cfg.d_conv - 1,
+                             cfg.d_inner + 2 * cfg.ssm_state)),
+                    state=mk((reps, batch_size, cfg.ssm_heads,
+                              cfg.ssm_headdim, cfg.ssm_state), jnp.float32))
+            caches[f"pos{i}"] = c
+        return caches

@@ -1,0 +1,2 @@
+"""repro.serve — KV/state-cache decode and prefill."""
+from .decode import make_serve_step, make_prefill, greedy_generate

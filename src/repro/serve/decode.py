@@ -1,0 +1,59 @@
+"""Serving: prefill + single-token decode with KV / SSM-state caches.
+
+``serve_step`` is what decode_32k / long_500k shapes lower: ONE new token
+per sequence against a seq_len-deep cache. For attention archs the cache is
+(K, V) per layer; MLA caches the compressed latent (kv_lora + rope key —
+the DeepSeek-V2 memory win); SSM archs cache a constant-size recurrent
+state (why long_500k is SSM/hybrid-only).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def make_serve_step(model):
+    """serve_step(params, caches, tokens(B,1)|features, offset(B,)) ->
+    (next_logits (B, vocab_padded), new_caches)"""
+
+    def serve_step(params, caches, tokens, offset):
+        batch = dict(tokens=tokens, offset=offset)
+        logits, _, new_caches = model.forward(params, batch, caches=caches,
+                                              remat=False)
+        return logits[:, -1, :], new_caches
+
+    return serve_step
+
+
+def make_prefill(model):
+    """prefill(params, caches, tokens(B,S)) -> (last_logits, caches)."""
+
+    def prefill(params, caches, tokens):
+        B = tokens.shape[0]
+        offset = jnp.zeros((B,), jnp.int32)
+        batch = dict(tokens=tokens, offset=offset)
+        logits, _, new_caches = model.forward(params, batch, caches=caches,
+                                              remat=False)
+        return logits[:, -1, :], new_caches
+
+    return prefill
+
+
+def greedy_generate(model, params, prompt, max_len: int, gen_tokens: int):
+    """Host loop: prefill the prompt then greedy-decode ``gen_tokens``."""
+    B, S = prompt.shape
+    caches = model.init_cache(B, max_len)
+    prefill = jax.jit(make_prefill(model))
+    step = jax.jit(make_serve_step(model))
+    logits, caches = prefill(params, caches, prompt)
+    out = [jnp.argmax(logits, -1)[:, None]]
+    pos = S
+    for _ in range(gen_tokens - 1):
+        tok = out[-1].astype(jnp.int32)
+        offset = jnp.full((B,), pos, jnp.int32)
+        logits, caches = step(params, caches, tok, offset)
+        out.append(jnp.argmax(logits, -1)[:, None])
+        pos += 1
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,5 @@
+"""repro.train — optimizer, train step, data pipeline, checkpointing."""
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+from .train_step import make_train_step
+from .data import SyntheticLM, make_batch_specs
+from .checkpoint import save_checkpoint, restore_checkpoint, latest_step

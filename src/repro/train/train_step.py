@@ -1,0 +1,62 @@
+"""Train-step factory: loss → grads (microbatched) → AdamW update.
+
+Gradient accumulation runs as a lax.scan over microbatches with grads
+reduced inside the scan (the per-microbatch reduce-scatter overlaps with
+the next microbatch's compute under XLA's scheduler — the paper's
+"overlap communication with computation", LM edition).
+
+Optional gradient compression (dist/compression.py) quantizes or
+sparsifies grads before the cross-pod reduction.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, *, accum: int = 1,
+                    compressor=None):
+    """Returns train_step(params, opt_state, batch) -> (p, s, metrics).
+
+    batch leaves have leading dim = global batch; with accum > 1 the batch
+    is split into `accum` microbatches along axis 0.
+    """
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), m
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), ms = jax.lax.scan(micro, (zero_g, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        if compressor is not None:
+            grads = compressor(grads)
+        new_params, new_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        return new_params, new_state, dict(loss=loss, **metrics,
+                                           **opt_metrics)
+
+    return train_step

@@ -1,0 +1,271 @@
+"""Multi-device distributed scenarios, executed in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=<N> (tests and benchmarks
+must not pollute the main process's single-device jax).
+
+Usage: python tests/dist_scenarios.py <scenario> [seed]
+Prints "PASS <scenario>" or raises.
+"""
+import os
+import sys
+
+N_DEV = int(os.environ.get("REPRO_DEVICES", "16"))
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={N_DEV} "
+    + os.environ.get("XLA_FLAGS_EXTRA", ""))
+
+import numpy as np                                            # noqa: E402
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (ARITHMETIC, BOOLEAN, MIN_PLUS, DistSpMat,            # noqa: E402
+                        DistSpMat3D, DistSpVec, DistVec, Monoid, make_grid,
+                        spgemm_2d, spgemm_3d, spmm_15d, spmm_2d, spmspv,
+                        spmv, spmv_iter, transpose_layout, assign, extract)
+from repro.core.coo import SENTINEL                           # noqa: E402
+
+
+def rand_coo(rng, m, n, density):
+    mask = rng.random((m, n)) < density
+    r, c = np.nonzero(mask)
+    v = (rng.random(len(r)) + 0.5).astype(np.float32)
+    dense = np.zeros((m, n), np.float32)
+    dense[r, c] = v
+    return dense, (r.astype(np.int64), c.astype(np.int64), v)
+
+
+def scenario_spgemm_2d(variant="rotation", merge="deferred"):
+    rng = np.random.default_rng(0)
+    mesh = make_grid(4, 4)
+    M = K = N = 96
+    da, ea = rand_coo(rng, M, K, 0.08)
+    db, eb = rand_coo(rng, K, N, 0.08)
+    A = DistSpMat.from_global_coo((M, K), *ea, (4, 4), mesh=mesh, cap=256)
+    B = DistSpMat.from_global_coo((K, N), *eb, (4, 4), mesh=mesh, cap=256)
+    C, ok = spgemm_2d(A, B, ARITHMETIC, mesh=mesh, prod_cap=4096,
+                      out_cap=2048, variant=variant, merge=merge)
+    assert bool(jnp.all(ok)), "overflow"
+    got = C.to_dense()[:M, :N]
+    np.testing.assert_allclose(got, da @ db, rtol=1e-4, atol=1e-5)
+    print(f"PASS spgemm_2d:{variant}:{merge}")
+
+
+def scenario_spgemm_2d_semiring():
+    rng = np.random.default_rng(1)
+    mesh = make_grid(4, 4)
+    M = 64
+    da, ea = rand_coo(rng, M, M, 0.1)
+    A = DistSpMat.from_global_coo((M, M), *ea, (4, 4), mesh=mesh, cap=128)
+    C, ok = spgemm_2d(A, A, MIN_PLUS, mesh=mesh, prod_cap=4096, out_cap=2048)
+    assert bool(jnp.all(ok))
+    # min-plus oracle with implicit-zero = +inf semantics
+    dd = np.where(da != 0, da, np.inf)
+    ref = np.full((M, M), np.inf)
+    for k in range(M):
+        ref = np.minimum(ref, dd[:, [k]] + dd[[k], :])
+    got = C.to_dense(zero=np.inf)[:M, :M]
+    mask = np.isfinite(ref)
+    np.testing.assert_allclose(got[mask], ref[mask], rtol=1e-4)
+    assert np.all(np.isinf(got[~mask]))
+    print("PASS spgemm_2d_semiring")
+
+
+def scenario_spgemm_3d(L=4):
+    rng = np.random.default_rng(2)
+    q = 2
+    mesh = make_grid(q, q, layers=L)
+    M = 80
+    da, ea = rand_coo(rng, M, M, 0.08)
+    db, eb = rand_coo(rng, M, M, 0.08)
+    A3 = DistSpMat3D.from_global_coo((M, M), *ea, (L, q, q), "acol",
+                                     mesh=mesh, cap=256)
+    B3 = DistSpMat3D.from_global_coo((M, M), *eb, (L, q, q), "brow",
+                                     mesh=mesh, cap=256)
+    C3, ok = spgemm_3d(A3, B3, ARITHMETIC, mesh=mesh, prod_cap=8192,
+                       out_cap=4096)
+    assert bool(jnp.all(ok)), "overflow"
+    got = C3.to_dense()[:M, :M]
+    np.testing.assert_allclose(got, da @ db, rtol=1e-4, atol=1e-5)
+    print(f"PASS spgemm_3d:L{L}")
+
+
+def scenario_spmv(variant="row"):
+    rng = np.random.default_rng(3)
+    mesh = make_grid(4, 4)
+    M, N = 96, 96
+    da, ea = rand_coo(rng, M, N, 0.1)
+    A = DistSpMat.from_global_coo((M, N), *ea, (4, 4), mesh=mesh, cap=256)
+    xg = (rng.random(N) + 0.5).astype(np.float32)
+    x = DistVec.from_global(xg, (4, 4), layout="col", mesh=mesh)
+    y = spmv(A, x, ARITHMETIC, mesh=mesh, variant=variant)
+    np.testing.assert_allclose(y.to_global()[:M], da @ xg, rtol=1e-4)
+    # iteration-ready variant returns col layout and same values
+    y2 = spmv_iter(A, x, ARITHMETIC, mesh=mesh, variant=variant)
+    assert y2.layout == "col"
+    np.testing.assert_allclose(y2.to_global()[:M], da @ xg, rtol=1e-4)
+    print(f"PASS spmv:{variant}")
+
+
+def scenario_spmspv(variant="sort", merge="sparse"):
+    rng = np.random.default_rng(4)
+    mesh = make_grid(4, 4)
+    M = 96
+    da, ea = rand_coo(rng, M, M, 0.08)
+    A = DistSpMat.from_global_coo((M, M), *ea, (4, 4), mesh=mesh, cap=256)
+    f = 7
+    idx = np.sort(rng.choice(M, f, replace=False)).astype(np.int64)
+    val = (rng.random(f) + 0.5).astype(np.float32)
+    x = DistSpVec.from_global(idx, val, M, (4, 4), cap=16, mesh=mesh)
+    y, ok = spmspv(A, x, ARITHMETIC, mesh=mesh, variant=variant,
+                   merge=merge, prod_cap=1024, out_cap=256)
+    assert bool(jnp.all(ok))
+    xd = np.zeros(M, np.float32)
+    xd[idx] = val
+    np.testing.assert_allclose(y.to_global_dense()[:M], da @ xd, rtol=1e-4,
+                               atol=1e-5)
+    print(f"PASS spmspv:{variant}:{merge}")
+
+
+def scenario_spmm(kind="15d"):
+    rng = np.random.default_rng(5)
+    mesh = make_grid(4, 4)
+    M, N, k = 96, 96, 8
+    da, ea = rand_coo(rng, M, N, 0.1)
+    A = DistSpMat.from_global_coo((M, N), *ea, (4, 4), mesh=mesh, cap=256)
+    Xg = (rng.random((N, k)) + 0.5).astype(np.float32)
+    if kind == "15d":
+        nb_pad = A.nb * 4 - N
+        X = DistVec.from_global(np.pad(Xg, ((0, 0),) if nb_pad == 0 else
+                                       ((0, nb_pad), (0, 0))),
+                                (4, 4), layout="col", mesh=mesh)
+        Y = spmm_15d(A, X, ARITHMETIC, mesh=mesh)
+        got = Y.to_global()[:M]
+    else:
+        n_pad = A.nb * 4
+        Xp = np.zeros((n_pad, k), np.float32)
+        Xp[:N] = Xg
+        xs = jax.device_put(Xp, jax.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("col", "row")))
+        Y = spmm_2d(A, xs, ARITHMETIC, mesh=mesh)
+        got = np.asarray(Y)[:M]
+    np.testing.assert_allclose(got, da @ Xg, rtol=1e-4, atol=1e-5)
+    print(f"PASS spmm:{kind}")
+
+
+def scenario_assign(skew=False):
+    rng = np.random.default_rng(6)
+    mesh = make_grid(4, 4)
+    N = 96
+    xg = rng.random(N).astype(np.float32)
+    v = DistVec.from_global(xg, (4, 4), layout="col", mesh=mesh)
+    # each device updates 3 random GLOBAL slots
+    cap = 4
+    gidx = np.full((4, 4, cap), SENTINEL, np.int32)
+    gval = np.zeros((4, 4, cap), np.float32)
+    ref = xg.copy()
+    all_targets = rng.permutation(N)[:16 * 3].reshape(4, 4, 3)
+    for i in range(4):
+        for j in range(4):
+            t = all_targets[i, j]
+            gidx[i, j, :3] = t
+            gval[i, j, :3] = (i * 4 + j) + np.arange(3) + 100.0
+            ref[t] = gval[i, j, :3]
+    v2, ok = assign(v, jnp.asarray(gidx), jnp.asarray(gval), mesh=mesh,
+                    skew_aware=skew)
+    assert bool(jnp.all(ok))
+    np.testing.assert_allclose(v2.to_global()[:N], ref, rtol=1e-6)
+    print(f"PASS assign:skew={skew}")
+
+
+def scenario_extract():
+    rng = np.random.default_rng(7)
+    mesh = make_grid(4, 4)
+    N = 96
+    xg = rng.random(N).astype(np.float32)
+    v = DistVec.from_global(xg, (4, 4), layout="col", mesh=mesh)
+    cap = 6
+    gidx = np.full((4, 4, cap), SENTINEL, np.int32)
+    want = np.zeros((4, 4, cap), np.float32)
+    for i in range(4):
+        for j in range(4):
+            t = rng.choice(N, 4, replace=False)
+            gidx[i, j, :4] = t
+            want[i, j, :4] = xg[t]
+    vals, ok = extract(v, jnp.asarray(gidx), mesh=mesh)
+    assert bool(jnp.all(ok))
+    got = np.asarray(vals)
+    mask = gidx != SENTINEL
+    np.testing.assert_allclose(got[mask], want[mask], rtol=1e-6)
+    print("PASS extract")
+
+
+def scenario_transpose_layout():
+    rng = np.random.default_rng(8)
+    mesh = make_grid(4, 4)
+    N = 64
+    xg = rng.random(N).astype(np.float32)
+    v = DistVec.from_global(xg, (4, 4), layout="row", mesh=mesh)
+    v2 = transpose_layout(v, mesh=mesh)
+    assert v2.layout == "col"
+    np.testing.assert_allclose(v2.to_global(), xg)
+    print("PASS transpose_layout")
+
+
+def scenario_apps_distributed():
+    """Graph apps end-to-end on a REAL 4x4 grid (not just 1x1)."""
+    import scipy.sparse as sp
+    import scipy.sparse.csgraph as csgraph
+    from repro.apps import bfs_levels, fastsv
+    rng = np.random.default_rng(11)
+    n = 64
+    dense = (rng.random((n, n)) < 0.06).astype(np.float32)
+    np.fill_diagonal(dense, 0)
+    dense = np.maximum(dense, dense.T)
+    r, c = np.nonzero(dense)
+    mesh = make_grid(4, 4)
+    A = DistSpMat.from_global_coo((n, n), r.astype(np.int64),
+                                  c.astype(np.int64), dense[r, c], (4, 4),
+                                  mesh=mesh, cap=512)
+    lv = bfs_levels(A, 0, mesh=mesh, prod_cap=1 << 14, out_cap=1 << 10)
+    ref = csgraph.shortest_path(sp.csr_matrix(dense), unweighted=True,
+                                indices=0)
+    ref = np.where(np.isinf(ref), -1, ref).astype(np.int32)
+    np.testing.assert_array_equal(lv[:n], ref)
+    labels = fastsv(A, mesh=mesh)
+    ncc, refcc = csgraph.connected_components(sp.csr_matrix(dense),
+                                              directed=False)
+    assert len(set(labels)) == ncc
+    for lbl in set(refcc):
+        members = np.nonzero(refcc == lbl)[0]
+        assert len(set(labels[members])) == 1
+    print("PASS apps_distributed")
+
+
+SCENARIOS = {
+    "spgemm_2d": lambda: scenario_spgemm_2d(),
+    "spgemm_2d_allgather": lambda: scenario_spgemm_2d("allgather"),
+    "spgemm_2d_incremental": lambda: scenario_spgemm_2d("rotation",
+                                                        "incremental"),
+    "spgemm_2d_semiring": scenario_spgemm_2d_semiring,
+    "spgemm_3d": lambda: scenario_spgemm_3d(4),
+    "spgemm_3d_L2": lambda: scenario_spgemm_3d(2),
+    "spmv_row": lambda: scenario_spmv("row"),
+    "spmv_col": lambda: scenario_spmv("col"),
+    "spmspv_sort": lambda: scenario_spmspv("sort", "sparse"),
+    "spmspv_spa_dense": lambda: scenario_spmspv("spa", "dense"),
+    "spmspv_bucket": lambda: scenario_spmspv("bucket", "sparse"),
+    "spmm_15d": lambda: scenario_spmm("15d"),
+    "spmm_2d": lambda: scenario_spmm("2d"),
+    "assign": lambda: scenario_assign(False),
+    "assign_skew": lambda: scenario_assign(True),
+    "extract": scenario_extract,
+    "transpose_layout": scenario_transpose_layout,
+    "apps_distributed": scenario_apps_distributed,
+}
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or list(SCENARIOS)
+    for name in names:
+        SCENARIOS[name]()

@@ -1,0 +1,174 @@
+"""Graph-application tests on a 1×1 grid (single device, full pipeline).
+
+The same code paths run distributed (see dist_scenarios.py apps group); the
+1×1 grid exercises every shard_map program with axis sizes 1.
+"""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+import scipy.sparse.csgraph as csgraph
+
+from repro.core import DistSpMat, make_grid
+from repro.io import rmat_coo
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_grid(1, 1)
+
+
+def make_graph(n=40, density=0.1, seed=0, symmetric=True):
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((n, n)) < density).astype(np.float32)
+    np.fill_diagonal(dense, 0)
+    if symmetric:
+        dense = np.maximum(dense, dense.T)
+    r, c = np.nonzero(dense)
+    return dense, (r.astype(np.int64), c.astype(np.int64),
+                   dense[r, c].astype(np.float32))
+
+
+class TestBFS:
+    def test_vs_scipy(self, mesh):
+        from repro.apps import bfs_levels
+        dense, (r, c, v) = make_graph(48, 0.08, seed=1)
+        A = DistSpMat.from_global_coo((48, 48), r, c, v, (1, 1), mesh=mesh,
+                                      cap=4096)
+        got = bfs_levels(A, 0, mesh=mesh)
+        ref = csgraph.shortest_path(sp.csr_matrix(dense), unweighted=True,
+                                    indices=0)
+        ref = np.where(np.isinf(ref), -1, ref).astype(np.int32)
+        np.testing.assert_array_equal(got[:48], ref)
+
+
+class TestPageRank:
+    def test_vs_power_iteration(self, mesh):
+        from repro.apps import pagerank
+        dense, (r, c, v) = make_graph(32, 0.12, seed=2, symmetric=False)
+        # our convention: A[dst, src]; dense[i, j] = edge i -> j
+        A = DistSpMat.from_global_coo((32, 32), c, r,
+                                      np.ones_like(v), (1, 1), mesh=mesh,
+                                      cap=4096)
+        got = pagerank(A, mesh=mesh, alpha=0.85, max_iters=200)
+        # numpy reference
+        n = 32
+        out_deg = dense.sum(1)
+        P = np.zeros((n, n))
+        for i in range(n):
+            if out_deg[i]:
+                P[:, i] = dense[i] / out_deg[i]
+        rref = np.full(n, 1 / n)
+        for _ in range(200):
+            dangling = rref[out_deg == 0].sum()
+            rref = 0.85 * (P @ rref + dangling / n) + 0.15 / n
+        rref /= rref.sum()
+        np.testing.assert_allclose(got, rref, rtol=1e-3, atol=1e-6)
+
+
+class TestFastSV:
+    @pytest.mark.parametrize("seed,density", [(3, 0.03), (4, 0.08)])
+    def test_vs_scipy(self, mesh, seed, density):
+        from repro.apps import fastsv
+        dense, (r, c, v) = make_graph(60, density, seed=seed)
+        A = DistSpMat.from_global_coo((60, 60), r, c, v, (1, 1), mesh=mesh,
+                                      cap=4096)
+        got = fastsv(A, mesh=mesh)
+        ncc, ref = csgraph.connected_components(sp.csr_matrix(dense),
+                                                directed=False)
+        # labels must induce the same partition
+        assert len(set(got)) == ncc
+        for lbl in set(ref):
+            members = np.nonzero(ref == lbl)[0]
+            assert len(set(got[members])) == 1
+
+    def test_two_components(self, mesh):
+        from repro.apps import fastsv
+        n = 24
+        dense = np.zeros((n, n), np.float32)
+        for i in range(0, 10):
+            dense[i, (i + 1) % 11] = dense[(i + 1) % 11, i] = 1  # ring 0..10
+        for i in range(12, n - 1):
+            dense[i, i + 1] = dense[i + 1, i] = 1                # path 12..23
+        r, c = np.nonzero(dense)
+        A = DistSpMat.from_global_coo((n, n), r.astype(np.int64),
+                                      c.astype(np.int64), dense[r, c],
+                                      (1, 1), mesh=mesh, cap=1024)
+        got = fastsv(A, mesh=mesh)
+        assert got[0] == got[5] and got[12] == got[23]
+        assert got[0] != got[12]
+        assert got[11] not in (got[0], got[12])  # isolated vertex
+
+
+class TestTriangles:
+    def test_vs_trace(self, mesh):
+        from repro.apps import triangle_count
+        dense, (r, c, v) = make_graph(36, 0.15, seed=5)
+        A = DistSpMat.from_global_coo((36, 36), r, c,
+                                      np.ones_like(v), (1, 1), mesh=mesh,
+                                      cap=4096)
+        got = triangle_count(A, mesh=mesh)
+        ref = int(round(np.trace(np.linalg.matrix_power(dense, 3)) / 6))
+        assert got == ref
+
+    def test_known(self, mesh):
+        # K4 has 4 triangles
+        dense = np.ones((4, 4), np.float32) - np.eye(4, dtype=np.float32)
+        r, c = np.nonzero(dense)
+        A = DistSpMat.from_global_coo((4, 4), r.astype(np.int64),
+                                      c.astype(np.int64), dense[r, c],
+                                      (1, 1), mesh=mesh, cap=64)
+        from repro.apps import triangle_count
+        assert triangle_count(A, mesh=mesh) == 4
+
+
+class TestHipMCL:
+    def test_separates_cliques(self, mesh):
+        from repro.apps import hipmcl
+        # two 6-cliques joined by a single weak edge + self loops
+        n = 12
+        dense = np.zeros((n, n), np.float32)
+        dense[:6, :6] = 1.0
+        dense[6:, 6:] = 1.0
+        dense[5, 6] = dense[6, 5] = 0.1
+        r, c = np.nonzero(dense)
+        A = DistSpMat.from_global_coo((n, n), r.astype(np.int64),
+                                      c.astype(np.int64), dense[r, c],
+                                      (1, 1), mesh=mesh, cap=1024)
+        labels = hipmcl(A, mesh=mesh, inflation=2.0, max_iters=12,
+                        prod_cap=1 << 14, out_cap=1 << 12)
+        assert len(set(labels[:6])) == 1
+        assert len(set(labels[6:])) == 1
+        assert labels[0] != labels[6]
+
+
+class TestMatching:
+    def test_maximal_on_bipartite(self, mesh):
+        from repro.apps import maximal_matching
+        rng = np.random.default_rng(7)
+        nr = nc = 32
+        dense = (rng.random((nr, nc)) < 0.15).astype(np.float32)
+        r, c = np.nonzero(dense)
+        A = DistSpMat.from_global_coo((nr, nc), r.astype(np.int64),
+                                      c.astype(np.int64), dense[r, c],
+                                      (1, 1), mesh=mesh, cap=4096)
+        mr, mc = maximal_matching(A, mesh=mesh)
+        # consistency
+        for i in range(nr):
+            if mr[i] >= 0:
+                assert mc[mr[i]] == i
+                assert dense[i, mr[i]] != 0
+        # maximality: no edge joins two unmatched vertices
+        for i in range(nr):
+            if mr[i] < 0:
+                for j in np.nonzero(dense[i])[0]:
+                    assert mc[j] >= 0, f"edge ({i},{j}) both unmatched"
+
+    def test_perfect_on_diagonal(self, mesh):
+        from repro.apps import maximal_matching
+        n = 16
+        r = np.arange(n, dtype=np.int64)
+        A = DistSpMat.from_global_coo((n, n), r, r, np.ones(n, np.float32),
+                                      (1, 1), mesh=mesh, cap=64)
+        mr, mc = maximal_matching(A, mesh=mesh)
+        np.testing.assert_array_equal(mr, np.arange(n))
+        np.testing.assert_array_equal(mc, np.arange(n))

@@ -1,0 +1,42 @@
+"""Distributed-op integration tests.
+
+Each test runs tests/dist_scenarios.py in a subprocess with 16 forced host
+devices (the main pytest process keeps its single device — required for the
+smoke tests and benchmarks).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SCRIPT = os.path.join(HERE, "dist_scenarios.py")
+
+GROUPS = {
+    "spgemm2d": ["spgemm_2d", "spgemm_2d_allgather", "spgemm_2d_incremental",
+                 "spgemm_2d_semiring"],
+    "spgemm3d": ["spgemm_3d", "spgemm_3d_L2"],
+    "spmv": ["spmv_row", "spmv_col", "transpose_layout"],
+    "spmspv": ["spmspv_sort", "spmspv_spa_dense", "spmspv_bucket"],
+    "spmm": ["spmm_15d", "spmm_2d"],
+    "assign": ["assign", "assign_skew", "extract"],
+    "apps": ["apps_distributed"],
+}
+
+
+def run_scenarios(names):
+    env = dict(os.environ, REPRO_DEVICES="16")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, SCRIPT] + names,
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, \
+        f"scenarios {names} failed:\n{proc.stdout}\n{proc.stderr}"
+    for n in names:
+        assert "PASS" in proc.stdout
+
+
+@pytest.mark.parametrize("group", sorted(GROUPS), ids=str)
+def test_distributed_group(group):
+    run_scenarios(GROUPS[group])

@@ -1,0 +1,144 @@
+"""I/O subsystem tests (paper §6): MM roundtrip, label relabeling, binary."""
+import numpy as np
+import pytest
+
+from repro.io import (read_binary, read_generalized_tuples, read_mm_header,
+                      read_mm_parallel, rmat_coo, rmat_edges,
+                      write_binary, write_mm_parallel)
+
+
+@pytest.fixture
+def coo(tmp_path):
+    rng = np.random.default_rng(0)
+    m, n, nnz = 50, 40, 300
+    rows = rng.integers(0, m, nnz).astype(np.int64)
+    cols = rng.integers(0, n, nnz).astype(np.int64)
+    key = rows * n + cols
+    _, first = np.unique(key, return_index=True)
+    rows, cols = rows[first], cols[first]
+    vals = rng.random(len(rows))
+    return (m, n), rows, cols, vals
+
+
+def canon(rows, cols, vals, n):
+    order = np.argsort(rows * n + cols)
+    return rows[order], cols[order], vals[order]
+
+
+class TestMM:
+    @pytest.mark.parametrize("nworkers", [1, 2, 4, 7])
+    def test_roundtrip(self, tmp_path, coo, nworkers):
+        shape, rows, cols, vals = coo
+        path = str(tmp_path / "t.mtx")
+        write_mm_parallel(path, shape, rows, cols, vals, nwriters=nworkers)
+        shape2, r2, c2, v2 = read_mm_parallel(path, nreaders=nworkers)
+        assert shape2 == shape
+        a = canon(rows, cols, vals, shape[1])
+        b = canon(r2, c2, v2, shape[1])
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+        np.testing.assert_allclose(a[2], b[2], rtol=1e-9)
+
+    def test_reader_counts_agree(self, tmp_path, coo):
+        shape, rows, cols, vals = coo
+        path = str(tmp_path / "t.mtx")
+        write_mm_parallel(path, shape, rows, cols, vals)
+        ref = read_mm_parallel(path, nreaders=1)
+        for nr in (2, 3, 8):
+            got = read_mm_parallel(path, nreaders=nr)
+            assert len(got[1]) == len(ref[1])
+
+    def test_header(self, tmp_path, coo):
+        shape, rows, cols, vals = coo
+        path = str(tmp_path / "t.mtx")
+        write_mm_parallel(path, shape, rows, cols, vals)
+        hdr = read_mm_header(path)
+        assert (hdr["m"], hdr["n"]) == shape
+        assert hdr["nnz"] == len(rows)
+
+    def test_pattern_symmetric(self, tmp_path):
+        path = str(tmp_path / "s.mtx")
+        with open(path, "w") as f:
+            f.write("%%MatrixMarket matrix coordinate pattern symmetric\n")
+            f.write("4\t4\t3\n1\t2\n2\t3\n4\t4\n")
+        shape, r, c, v = read_mm_parallel(path, nreaders=2)
+        dense = np.zeros((4, 4))
+        dense[r, c] = v
+        assert dense[0, 1] == 1 and dense[1, 0] == 1   # expanded
+        assert dense[3, 3] == 1 and dense.sum() == 5
+
+
+class TestBinary:
+    def test_roundtrip(self, tmp_path, coo):
+        shape, rows, cols, vals = coo
+        path = str(tmp_path / "t.cbb")
+        write_binary(path, shape, rows, cols, vals.astype(np.float64))
+        shape2, r2, c2, v2 = read_binary(path, nreaders=3)
+        assert shape2 == shape
+        np.testing.assert_array_equal(rows, r2)
+        np.testing.assert_array_equal(cols, c2)
+        np.testing.assert_allclose(vals, v2)
+
+
+class TestLabelFormat:
+    def test_relabel_roundtrip(self, tmp_path):
+        # arbitrary string labels, protein-ish
+        edges = [("ProtA", "ProtB", 0.9), ("ProtB", "ProtC", 0.5),
+                 ("ProtC", "ProtA", 0.7), ("seq_XYZ", "ProtA", 0.2)]
+        path = str(tmp_path / "g.lbl")
+        with open(path, "w") as f:
+            for s, d, w in edges:
+                f.write(f"{s}\t{d}\t{w}\n")
+        shape, rows, cols, vals, labels = read_generalized_tuples(path, 3)
+        assert shape[0] == 4 and len(labels) == 4
+        # edges survive relabeling
+        name = {lb: i for i, lb in enumerate(labels)}
+        got = {(rows[i], cols[i], vals[i]) for i in range(len(rows))}
+        want = {(name[s], name[d], w) for s, d, w in edges}
+        assert got == want
+
+    def test_scattered_integer_labels(self, tmp_path):
+        # the paper's "scattered integers in a wide range" case
+        path = str(tmp_path / "w.lbl")
+        with open(path, "w") as f:
+            f.write("1000000000001\t42\n42\t999\n999\t1000000000001\n")
+        shape, rows, cols, vals, labels = read_generalized_tuples(path, 2)
+        assert shape[0] == 3
+        assert sorted(labels) == ["1000000000001", "42", "999"]
+        assert len(rows) == 3 and np.all(vals == 1.0)
+
+    def test_ids_consecutive_and_permuted(self, tmp_path):
+        path = str(tmp_path / "big.lbl")
+        n = 200
+        with open(path, "w") as f:
+            for i in range(n):
+                f.write(f"v{i}\tv{(i + 1) % n}\n")
+        shape, rows, cols, vals, labels = read_generalized_tuples(path, 4)
+        assert shape[0] == n
+        assert sorted(set(rows) | set(cols)) == list(range(n))
+        # hash ordering != insertion ordering (load-balance side effect)
+        order = [labels.index(f"v{i}") for i in range(20)]
+        assert order != sorted(order)
+
+
+class TestRMAT:
+    def test_deterministic(self):
+        a = rmat_edges(8, 8, seed=3)
+        b = rmat_edges(8, 8, seed=3)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+
+    def test_shape_and_skew(self):
+        shape, rows, cols, vals = rmat_coo(10, 16, seed=1)
+        n = 1 << 10
+        assert shape == (n, n)
+        assert rows.max() < n and cols.max() < n
+        # power-law-ish: top-1% of rows hold a disproportionate share
+        counts = np.bincount(rows, minlength=n)
+        top = np.sort(counts)[-n // 100:].sum()
+        assert top > 0.05 * len(rows)
+
+    def test_dedup(self):
+        shape, rows, cols, vals = rmat_coo(6, 16, seed=2)
+        n = 1 << 6
+        assert len(np.unique(rows * n + cols)) == len(rows)
