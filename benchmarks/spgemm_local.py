@@ -1,6 +1,11 @@
 """§4.1 reproduction: hash-vs-heap analogue — dense-accumulator vs ESC
 local SpGEMM across compression ratios (paper: heap wins at LOW compression
 ratio, hash at HIGH; our TPU mapping: ESC-sort ↔ heap, dense tile ↔ hash).
+
+Capacities and the algo pick come from the planner's exact symbolic phase
+(core/plan.py, plan_local_spgemm) instead of ad-hoc constants, and the
+sweep additionally times the order-tag fast path (row-sorted tiles skip the
+expansion sort) against the untagged fallback.
 """
 from __future__ import annotations
 
@@ -12,8 +17,8 @@ import numpy as np
 
 from repro.core import ARITHMETIC
 from repro.core.coo import COO
-from repro.core.local_spgemm import (compression_ratio, spgemm_dense,
-                                     spgemm_esc, spgemm_flops)
+from repro.core.local_spgemm import spgemm_dense, spgemm_esc
+from repro.core.plan import plan_local_spgemm
 
 
 def _time(fn, *args, reps=3):
@@ -35,19 +40,25 @@ def run(quick=True):
         dense = np.where(rng.random((n, n)) < d,
                          rng.random((n, n)).astype(np.float32) + 0.5, 0.0)
         nnz = int((dense != 0).sum())
-        A = COO.from_dense(jnp.asarray(dense), cap=nnz + 8)
-        flops = int(spgemm_flops(A, A))
-        prod_cap = int(flops * 1.2) + 64
-        out_cap = min(n * n, prod_cap)
+        A = COO.from_dense(jnp.asarray(dense), cap=nnz + 8)   # order='row'
+        A_untagged = COO(A.row, A.col, A.val, A.nnz, A.shape, "none")
+        plan = plan_local_spgemm(A, A)
         esc = jax.jit(lambda a, b: spgemm_esc(
-            a, b, ARITHMETIC, prod_cap=prod_cap, out_cap=out_cap))
+            a, b, ARITHMETIC, prod_cap=plan.prod_cap, out_cap=plan.out_cap))
         dns = jax.jit(lambda a, b: spgemm_dense(
-            a, b, ARITHMETIC, out_cap=out_cap))
-        t_esc = _time(esc, A, A)
+            a, b, ARITHMETIC, out_cap=plan.out_cap))
+        t_esc = _time(esc, A, A)                   # sorted fast path
+        t_esc_untagged = _time(esc, A_untagged, A_untagged)  # seed path
         t_dns = _time(dns, A, A)
-        cr = float(compression_ratio(A, A))
-        rows.append((f"spgemm_esc_d{d}", t_esc, f"flops={flops}"))
-        rows.append((f"spgemm_dense_d{d}", t_dns, f"cr={cr:.2f}"))
+        rows.append((f"spgemm_esc_d{d}", t_esc, f"flops={plan.flops}"))
+        rows.append((f"spgemm_esc_untagged_d{d}", t_esc_untagged,
+                     "sort-fallback path"))
+        rows.append((f"spgemm_sorted_speedup_d{d}",
+                     t_esc_untagged / max(t_esc, 1e-9),
+                     "untagged/tagged ratio (>=1 => fast path not slower)"))
+        rows.append((f"spgemm_dense_d{d}", t_dns, f"cr={plan.ratio:.2f}"))
+        rows.append((f"spgemm_planner_algo_d{d}",
+                     t_dns if plan.algo == "dense" else t_esc, plan.algo))
         rows.append((f"spgemm_winner_d{d}", min(t_esc, t_dns),
                      "esc" if t_esc < t_dns else "dense"))
     return rows

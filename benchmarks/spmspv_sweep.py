@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core import ARITHMETIC
 from repro.core.coo import COO
+from repro.core.plan import plan_local_spmspv
 from repro.core.spmv_local import (SPMSPV_VARIANTS, spmv_row,
                                    spvec_from_dense)
 from repro.io import rmat_coo
@@ -45,8 +46,8 @@ def run(scale=12, quick=True):
             xd = np.zeros(n, np.float32)
             xd[rng.choice(n, f, replace=False)] = 1.0
             xi, xv, xn = spvec_from_dense(jnp.asarray(xd), cap=f + 8)
-            prod_cap = int(ef * f * 8 + 1024)
-            out_cap = min(n, prod_cap)
+            plan = plan_local_spmspv(A, f)     # caps + Fig-3 variant pick
+            prod_cap, out_cap = plan.prod_cap, plan.out_cap
             best, best_t = None, np.inf
             for name, fn in SPMSPV_VARIANTS.items():
                 jfn = jax.jit(lambda a, i, vv, nn, fn=fn: fn(
@@ -62,4 +63,6 @@ def run(scale=12, quick=True):
             winner = best if best_t < t else "spmv"
             rows.append((f"fig3_best_ef{ef}_d{dens}", min(best_t, t),
                          winner))
+            rows.append((f"fig3_planner_pick_ef{ef}_d{dens}", 0.0,
+                         "spmv" if plan.use_spmv else plan.variant))
     return rows

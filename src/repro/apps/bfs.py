@@ -3,6 +3,11 @@
 Level-synchronous BFS: the frontier is a FullyDistSpVec, each step is one
 SpMSpV over the boolean semiring followed by a piece-aligned mask against
 the visited vector (no communication — the superimposed layout payoff).
+
+Capacities are chosen by the planner (core/plan.py) from the *current*
+frontier size each level — the local SpMSpV data structure follows the
+Fig-3 density rule, and an overflowing level retries with grown caps
+instead of asserting. Pass ``prod_cap``/``out_cap`` only to override.
 """
 from __future__ import annotations
 
@@ -10,14 +15,14 @@ import numpy as np
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from ..core import (BOOLEAN, DistSpMat, DistSpVec, DistVec, spmspv,
+from ..core import (BOOLEAN, DistSpMat, DistSpVec, DistVec,
                     transpose_spvec_layout)
 from ..core.matops import spvec_mask, spvec_nnz, vec_scatter_spvec
-from ..core.coo import SENTINEL
+from ..core.plan import plan_spmspv, spmspv as spmspv_planned
 
 
 def bfs_levels(a: DistSpMat, source: int, *, mesh: Mesh,
-               prod_cap: int = 1 << 16, out_cap: int = 1 << 14,
+               prod_cap: int | None = None, out_cap: int | None = None,
                max_iters: int | None = None) -> np.ndarray:
     """Return per-vertex BFS levels (-1 = unreachable) from ``source``.
 
@@ -29,9 +34,12 @@ def bfs_levels(a: DistSpMat, source: int, *, mesh: Mesh,
     grid = a.grid
     levels = DistVec.from_global(np.full(n, -1, np.int32), grid,
                                  layout="row", mesh=mesh)
+    # frontier capacity: the planner's output cap for a worst-case frontier
+    # (so pieces never truncate); explicit out_cap still wins
+    fcap = out_cap or plan_spmspv(a, n, out_cap=out_cap).out_cap
     frontier = DistSpVec.from_global(np.array([source], np.int64),
                                      np.ones(1, np.bool_), n, grid,
-                                     cap=out_cap, layout="row", mesh=mesh)
+                                     cap=fcap, layout="row", mesh=mesh)
     levels = vec_scatter_spvec(levels, frontier,
                                lambda cur, xv: jnp.zeros_like(cur))
     level = 0
@@ -39,9 +47,8 @@ def bfs_levels(a: DistSpMat, source: int, *, mesh: Mesh,
     while int(spvec_nnz(frontier)) > 0 and level < max_iters:
         level += 1
         fcol = transpose_spvec_layout(frontier, mesh=mesh)
-        nxt, ok = spmspv(a, fcol, BOOLEAN, mesh=mesh, variant="sort",
-                         merge="sparse", prod_cap=prod_cap, out_cap=out_cap)
-        assert bool(jnp.all(ok)), "BFS capacity overflow"
+        nxt, _plan = spmspv_planned(a, fcol, BOOLEAN, mesh=mesh,
+                                    prod_cap=prod_cap, out_cap=out_cap)
         nxt = spvec_mask(nxt, levels, lambda xv, lv: lv < 0)
         levels = vec_scatter_spvec(
             levels, nxt, lambda cur, xv: jnp.full_like(cur, level))

@@ -23,6 +23,7 @@ from jax.sharding import Mesh
 from ..core import DistSpMat, DistVec
 from ..core.assign import assign, extract
 from ..core.coo import SENTINEL
+from ..core.plan import spmv_variant
 from ..core.semiring import MIN_INT, Semiring
 from ..core.spmv import spmv_iter
 
@@ -46,6 +47,7 @@ def fastsv(a: DistSpMat, *, mesh: Mesh, max_iters: int = 64,
     # worst-case hooking traffic concentrates on root pieces — size the
     # router for it (the skew-aware path offloads heavy roots to broadcast)
     rcap = max(npad, 64)
+    variant = spmv_variant(a)   # planner: match the tile's sort order
 
     for it in range(max_iters):
         f_old = f
@@ -55,7 +57,8 @@ def fastsv(a: DistSpMat, *, mesh: Mesh, max_iters: int = 64,
         assert bool(jnp.all(ok))
         gf = DistVec(gf_vals, n, grid, "col")
         # h[u] = min over neighbors of gf — (min, select2nd) SpMV
-        h = spmv_iter(a, gf, MIN_SELECT2ND_I32, mesh=mesh)   # layout 'col'
+        h = spmv_iter(a, gf, MIN_SELECT2ND_I32, mesh=mesh,   # layout 'col'
+                      variant=variant)
         # stochastic hooking: f[f_old[u]] = min(·, h[u]) — distributed assign
         f2, ok = assign(f, f_old.data.astype(jnp.int32), h.data, mesh=mesh,
                         add=MIN_INT, accumulate=True, skew_aware=skew_aware,

@@ -17,10 +17,11 @@ import numpy as np
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from ..core import ARITHMETIC, DistSpMat, spgemm_2d
+from ..core import ARITHMETIC, DistSpMat
 from ..core.coo import SENTINEL
 from ..core.matops import (mat_apply_local, mat_ewise_local, mat_reduce,
                            mat_scale_cols, mat_sum, mat_transpose, vec_apply)
+from ..core.plan import spgemm as spgemm_planned
 from .fastsv import fastsv
 
 
@@ -33,17 +34,21 @@ def _normalize_cols(a: DistSpMat, *, mesh: Mesh) -> DistSpMat:
 
 def hipmcl(a: DistSpMat, *, mesh: Mesh, inflation: float = 2.0,
            prune_threshold: float = 1e-4, max_iters: int = 20,
-           prod_cap: int = 1 << 16, out_cap: int = 1 << 14,
+           prod_cap: int | None = None, out_cap: int | None = None,
            tol: float = 1e-5) -> np.ndarray:
-    """Cluster the graph; returns per-vertex cluster labels."""
+    """Cluster the graph; returns per-vertex cluster labels.
+
+    Expansion capacities are re-planned each iteration from the current
+    iterate's tile nnz (pruning keeps them shrinking) and grown on overflow
+    — the caps in the signature are optional overrides only.
+    """
     n = a.shape[0]
     # callers should include self-loops in `a` (MCL standard practice)
     c = _normalize_cols(a, mesh=mesh)
     prev_sum = None
     for it in range(max_iters):
-        c2, ok = spgemm_2d(c, c, ARITHMETIC, mesh=mesh, prod_cap=prod_cap,
-                           out_cap=out_cap)
-        assert bool(jnp.all(ok)), "hipmcl expansion overflow"
+        c2, _plan = spgemm_planned(c, c, ARITHMETIC, mesh=mesh,
+                                   prod_cap=prod_cap, out_cap=out_cap)
         # inflation
         c2 = mat_apply_local(c2, lambda t: t.apply(lambda v: v ** inflation),
                              mesh=mesh)

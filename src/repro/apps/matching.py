@@ -4,8 +4,8 @@ Simplified Azad-Buluç iteration over CombBLAS primitives:
   repeat until no augmenting edges:
     1. every unmatched row proposes to one adjacent unmatched column
        (SpMV with (max, select-col-id): h[c] = max row id proposing to c)
-    2.每 column accepts one proposer; accepted pairs update mateRow/mateCol
-       (piece-aligned vector updates + one distributed assign)
+    2. each column accepts one proposer; accepted pairs update mateRow/
+       mateCol (piece-aligned vector updates + one distributed assign)
 
 The paper replicates the mate vectors along process rows/columns to avoid
 fine-grained traffic; here the same effect comes from the all_gather inside
@@ -20,6 +20,7 @@ from jax.sharding import Mesh
 
 from ..core import DistSpMat, DistVec
 from ..core.assign import assign
+from ..core.plan import spmv_variant
 from ..core.semiring import MAX_INT, Semiring
 from ..core.spmv import spmv_iter, transpose_layout
 
@@ -52,6 +53,7 @@ def maximal_matching(a: DistSpMat, *, mesh: Mesh, max_iters: int = 64):
     from ..core.matops import mat_transpose
     from ..core.coo import SENTINEL
     at = mat_transpose(a, mesh=mesh)
+    variant = spmv_variant(at)   # planner: match the transposed tile order
     ids_c = DistVec.from_global(np.arange(npad_c, dtype=np.int32), grid,
                                 layout="col", mesh=mesh)
     for it in range(max_iters):
@@ -59,7 +61,8 @@ def maximal_matching(a: DistSpMat, *, mesh: Mesh, max_iters: int = 64):
         prop = DistVec(jnp.where(mate_row.data == _NONE, ids_r.data, _NONE),
                        nr, grid, "col")
         # h[c] = max proposing row over N(c):  y = A^T prop via (max, 2nd)
-        h = spmv_iter(at, prop, MAXSEL, mesh=mesh)       # layout 'col', len nc
+        h = spmv_iter(at, prop, MAXSEL, mesh=mesh,       # layout 'col', len nc
+                      variant=variant)
         # 2. columns accept: unmatched columns with a valid proposer
         accept = (mate_col.data == _NONE) & (h.data > _NONE) & \
             (h.data < jnp.int32(2**31 - 1))

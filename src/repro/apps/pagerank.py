@@ -11,6 +11,7 @@ from jax.sharding import Mesh
 
 from ..core import ARITHMETIC, DistSpMat, DistVec, spmv_iter
 from ..core.matops import mat_reduce, mat_scale_cols, vec_apply, vec_sum
+from ..core.plan import spmv_variant
 from ..core.spmv import transpose_layout
 
 
@@ -36,10 +37,13 @@ def pagerank(a: DistSpMat, *, mesh: Mesh, alpha: float = 0.85,
     r = DistVec.from_global(np.full(n, 1.0 / n, np.float32), grid,
                             layout="col", mesh=mesh)
     teleport = (1.0 - alpha) / n
+    # planner rule: pick the local SpMV flavor whose sort the tiles get free
+    variant = spmv_variant(an)
     for it in range(max_iters):
         dangling = float(vec_sum(
             DistVec(r.data * dangling_mask.data, n, grid, "col")))
-        r_new = spmv_iter(an, r, ARITHMETIC, mesh=mesh)   # back to 'col'
+        r_new = spmv_iter(an, r, ARITHMETIC, mesh=mesh,   # back to 'col'
+                          variant=variant)
         add_const = teleport + alpha * dangling / n
         r_new = vec_apply(r_new, lambda x: alpha * x + add_const)
         # zero the padding tail introduced by from_global rounding

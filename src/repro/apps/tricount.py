@@ -3,26 +3,30 @@
 L is the strict lower triangle; (L·L)[i,j] counts k with j<k<i adjacent to
 both, masking by L keeps (i,j) edges — each triangle counted exactly once.
 The elementwise mask is tile-aligned (no communication).
+
+The L·L capacities come from the planner (symbolic pass over tile nnz with
+retry-on-overflow) — no hard-coded caps; pass ``prod_cap``/``out_cap`` only
+to override.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from ..core import ARITHMETIC, DistSpMat, spgemm_2d
+from ..core import ARITHMETIC, DistSpMat
 from ..core.coo import ewise_intersect
-from ..core.matops import mat_ewise_local, mat_select_lower, mat_sum
+from ..core.matops import (mat_apply_local, mat_ewise_local, mat_select_lower,
+                           mat_sum)
+from ..core.plan import spgemm as spgemm_planned
 
 
-def triangle_count(a: DistSpMat, *, mesh: Mesh, prod_cap: int = 1 << 16,
-                   out_cap: int = 1 << 14) -> int:
+def triangle_count(a: DistSpMat, *, mesh: Mesh, prod_cap: int | None = None,
+                   out_cap: int | None = None) -> int:
     """Count triangles of the symmetric graph ``a`` (values ignored)."""
     ones = lambda t: t.apply(lambda v: jnp.ones_like(v))
-    from ..core.matops import mat_apply_local
     l = mat_select_lower(mat_apply_local(a, ones, mesh=mesh), mesh=mesh)
-    b, ok = spgemm_2d(l, l, ARITHMETIC, mesh=mesh, prod_cap=prod_cap,
-                      out_cap=out_cap)
-    assert bool(jnp.all(ok)), "tricount overflow"
+    b, _plan = spgemm_planned(l, l, ARITHMETIC, mesh=mesh,
+                              prod_cap=prod_cap, out_cap=out_cap)
     masked = mat_ewise_local(
         b, l, lambda t1, t2: ewise_intersect(t1, t2, jnp.multiply,
                                              out_cap=t1.cap), mesh=mesh)

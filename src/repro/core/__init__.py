@@ -10,8 +10,10 @@ Layering:
   spmv          distributed SpMV / SpMSpV (§3.1)
   spmm          1.5D + true-2D SpMM
   assign        skew-aware vector assign / extract (§3.3)
+  plan          capacity planner + variant rules of thumb (§5, §7)
+  compat        jax version shims (single home for post-0.4.x APIs)
 """
-from . import semiring
+from . import compat, semiring
 from .coo import COO, SENTINEL, column_range, ewise_intersect, ewise_union
 from .dist import (DistSpMat, DistSpMat3D, DistSpVec, DistVec, make_grid,
                    shard_put, specs_of)
@@ -27,3 +29,8 @@ from .spmv import (spmspv, spmv, spmv_iter, transpose_layout,
 from .spmv_local import (SPMSPV_VARIANTS, spmspv_auto, spmv_col, spmv_row,
                          spvec_from_dense, spvec_to_dense)
 from .assign import assign, extract
+from .plan import (LocalSpGEMMPlan, LocalSpMSpVPlan, SpGEMMPlan, SpMSpVPlan,
+                   plan_local_spgemm, plan_local_spmspv, plan_spgemm,
+                   plan_spmspv, spmspv_variant_for_density, spmv_variant)
+from .plan import spgemm as spgemm_planned
+from .plan import spmspv as spmspv_planned

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map
 from .coo import SENTINEL
 from .dist import DistVec, specs_of
 from .semiring import Monoid, segment_reduce
@@ -155,7 +156,7 @@ def assign(v: DistVec, gidx: Array, val: Array, *, mesh: Mesh,
             d = jnp.where(touched, add.op(d, upd) if accumulate else upd, d)
         return d[None, None], ok[None, None]
 
-    out, ok = jax.shard_map(
+    out, ok = shard_map(
         body, mesh=mesh,
         in_specs=(P("row", "col", None), P("row", "col", None),
                   P("row", "col", None)),
@@ -210,7 +211,7 @@ def extract(v: DistVec, gidx: Array, *, mesh: Mesh,
         out = out.at[jnp.where(s2 != cap, s2, cap)].set(a2, mode="drop")
         return out[None, None], (ok1 & okb1 & okb2)[None, None]
 
-    vals, ok = jax.shard_map(
+    vals, ok = shard_map(
         body, mesh=mesh,
         in_specs=(P("row", "col", None), P("row", "col", None)),
         out_specs=(P("row", "col", None), P("row", "col")))(v.data, gidx)

@@ -187,8 +187,10 @@ class COO:
         return d.to_dense(add.identity)
 
     def transpose(self) -> "COO":
+        # (row, col)-sorted becomes (col, row)-sorted in the new coordinates
+        order = {"row": "col", "col": "row"}.get(self.order, "none")
         return COO(self.col, self.row, self.val, self.nnz,
-                   (self.shape[1], self.shape[0]), "none")
+                   (self.shape[1], self.shape[0]), order)
 
     def apply(self, fn) -> "COO":
         """Elementwise apply on stored values (GraphBLAS apply)."""
@@ -199,13 +201,14 @@ class COO:
     def prune(self, keep_fn, fill=0) -> "COO":
         """Drop stored entries where ``keep_fn(val)`` is False (GraphBLAS select)."""
         keep = keep_fn(self.val) & self.mask()
-        order = jnp.argsort(~keep)  # kept entries first, stable
+        order = jnp.argsort(~keep, stable=True)  # kept entries first, stable
         row = jnp.where(keep[order], self.row[order], SENTINEL)
         col = jnp.where(keep[order], self.col[order], SENTINEL)
         km = keep[order].reshape((-1,) + (1,) * len(self.vdims))
         val = jnp.where(km, self.val[order], jnp.asarray(fill, self.val.dtype))
+        # stable compaction keeps surviving entries in relative order
         return COO(row, col, val, jnp.sum(keep).astype(jnp.int32),
-                   self.shape, "none")
+                   self.shape, self.order)
 
     def reduce(self, axis: int, add: Monoid) -> Array:
         """Row (axis=1) or column (axis=0) reduction to a dense vector."""
@@ -298,8 +301,9 @@ def ewise_intersect(a: COO, b: COO, mul, out_cap: int | None = None,
               jnp.where(hit.reshape((-1,) + (1,) * len(val.shape[1:])),
                         val, jnp.asarray(zero, val.dtype)),
               jnp.sum(hit).astype(jnp.int32), a.shape, "none")
-    # compact kept entries to the front
-    order = jnp.argsort(~hit)
+    # compact kept entries to the front; stable, so the row-major order of
+    # sa survives and the result keeps the 'row' tag
+    order = jnp.argsort(~hit, stable=True)
     out = COO(out.row[order], out.col[order],
-              out.val[order], out.nnz, out.shape, "none")
+              out.val[order], out.nnz, out.shape, "row")
     return out.with_cap(out_cap, zero)

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from . import compat
 from .coo import COO, SENTINEL
 
 Array = jax.Array
@@ -48,17 +49,19 @@ def _ceil(a, b):
 
 def make_grid(pr: int, pc: int, layers: int = 1,
               devices=None) -> Mesh:
-    """Process grid for sparse ops: ('row','col') or ('layer','row','col')."""
+    """Process grid for sparse ops: ('row','col') or ('layer','row','col').
+
+    Axis types (auto) are requested only on jax versions that have them —
+    see core/compat.py for the 0.4.x fallback.
+    """
     devices = devices if devices is not None else jax.devices()
     n = layers * pr * pc
     if len(devices) < n:
         raise ValueError(f"need {n} devices, have {len(devices)}")
-    auto = (jax.sharding.AxisType.Auto,)
     if layers == 1:
-        return jax.make_mesh((pr, pc), ("row", "col"), devices=devices[:n],
-                             axis_types=auto * 2)
-    return jax.make_mesh((layers, pr, pc), ("layer", "row", "col"),
-                         devices=devices[:n], axis_types=auto * 3)
+        return compat.make_mesh((pr, pc), ("row", "col"), devices=devices[:n])
+    return compat.make_mesh((layers, pr, pc), ("layer", "row", "col"),
+                            devices=devices[:n])
 
 
 # --------------------------------------------------------------------------
@@ -81,6 +84,11 @@ class DistSpMat:
     nnz: Array   # (pr, pc) int32
     shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
     grid: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    # per-tile entry order, same vocabulary as COO.order. 'row' is the
+    # maintained invariant: assembly sorts tiles row-major and every core op
+    # either preserves it or re-establishes it via dedup (DESIGN.md §4.3),
+    # so local kernels hit their sort-free fast paths.
+    order: str = dataclasses.field(default="none", metadata=dict(static=True))
 
     @property
     def pr(self):
@@ -112,7 +120,7 @@ class DistSpMat:
         c = self.col.reshape(self.cap)
         v = self.val.reshape((self.cap,) + self.val.shape[3:])
         n = self.nnz.reshape(())
-        return COO(r, c, v, n, (self.mb, self.nb), "none")
+        return COO(r, c, v, n, (self.mb, self.nb), self.order)
 
     # ---------------- host-side assembly / extraction ----------------
     @staticmethod
@@ -159,7 +167,9 @@ class DistSpMat:
             col=jnp.asarray(Cc.reshape(pr, pc, cap)),
             val=jnp.asarray(V.reshape((pr, pc, cap) + tuple(vdims))),
             nnz=jnp.asarray(counts.reshape(pr, pc).astype(np.int32)),
-            shape=(int(M), int(N)), grid=(pr, pc))
+            shape=(int(M), int(N)), grid=(pr, pc),
+            # the lexsort above orders each tile by (lr, lc): row-major
+            order="row")
         if mesh is not None:
             out = shard_put(out, mesh)
         return out
@@ -212,6 +222,7 @@ class DistSpMat3D:
     shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True))
     grid: tuple[int, int, int] = dataclasses.field(metadata=dict(static=True))
     dist: str = dataclasses.field(metadata=dict(static=True))
+    order: str = dataclasses.field(default="none", metadata=dict(static=True))
 
     @property
     def L(self):
@@ -247,7 +258,7 @@ class DistSpMat3D:
         tr, tc = self.block_sizes()
         return COO(self.row.reshape(cap), self.col.reshape(cap),
                    self.val.reshape((cap,) + self.val.shape[4:]),
-                   self.nnz.reshape(()), (tr, tc), "none")
+                   self.nnz.reshape(()), (tr, tc), self.order)
 
     def _global_offsets(self, l, i, j):
         tr, tc = self.block_sizes()
@@ -317,7 +328,8 @@ class DistSpMat3D:
             col=jnp.asarray(Cc.reshape(L, q, q, cap)),
             val=jnp.asarray(V.reshape(L, q, q, cap)),
             nnz=jnp.asarray(counts.reshape(L, q, q).astype(np.int32)),
-            shape=(int(M), int(N)), grid=(L, q, q), dist=dist)
+            shape=(int(M), int(N)), grid=(L, q, q), dist=dist,
+            order="row")  # lexsort above is (lr, lc) within tile
         if mesh is not None:
             out = shard_put(out, mesh)
         return out

@@ -27,14 +27,23 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .coo import COO, SENTINEL, column_range
+from .coo import COO, SENTINEL, column_range, row_range
 from .semiring import ARITHMETIC, Monoid, Semiring, dense_semiring_matmul
 
 Array = jax.Array
 
 
 def spgemm_flops(a: COO, b: COO) -> Array:
-    """Phase 1 (paper §4.1): exact flops = Σ_t nnz(A(:, B.row[t]))."""
+    """Phase 1 (paper §4.1): exact flops = Σ_t nnz(A(:, B.row[t])).
+
+    Sorted fast path (DESIGN.md §4.2): when B carries the row-major tag the
+    same sum is Σ_u nnz(B(A.col[u], :)) over A's entries via binary search on
+    B's row pointers — no sort of either operand. Otherwise A is col-sorted
+    (free when A already carries the 'col' tag).
+    """
+    if b.order == "row" and a.order != "col":
+        start, end = row_range(b.row, jnp.where(a.mask(), a.col, SENTINEL))
+        return jnp.sum(jnp.where(a.mask(), end - start, 0))
     sa = a.sort("col")
     start, end = column_range(sa.col, jnp.where(b.mask(), b.row, SENTINEL))
     return jnp.sum(jnp.where(b.mask(), end - start, 0))
@@ -44,7 +53,17 @@ def _expand(a: COO, b: COO, sr: Semiring, prod_cap: int):
     """ESC expansion: one slot per scalar multiply (O(flops) work).
 
     Returns (rows, cols, vals, nprod, ok). Padding slots hold SENTINEL/zero.
+
+    Two symmetric formulations, selected by the order tags (DESIGN.md §4.2):
+      - B row-sorted (the maintained 'row' invariant): walk A's entries and
+        binary-search B's row ranges. Sort-free — the fast path.
+      - otherwise: col-sort A (free when tagged 'col') and walk B's entries
+        against A's column ranges (the seed formulation).
+    Both enumerate the identical product multiset, so downstream merge and
+    overflow flags are unchanged.
     """
+    if b.order == "row" and a.order != "col":
+        return _expand_sorted_b(a, b, sr, prod_cap)
     sa = a.sort("col")
     sb = b
     # per-B-nonzero column ranges of A (DCSC-style binary search)
@@ -72,6 +91,33 @@ def _expand(a: COO, b: COO, sr: Semiring, prod_cap: int):
     return rows, cols, vals, nprod, ok
 
 
+def _expand_sorted_b(a: COO, b: COO, sr: Semiring, prod_cap: int):
+    """Sort-free expansion against a row-sorted B (the 'row' invariant path)."""
+    # per-A-nonzero row ranges of B (CSR-style binary search on the tag)
+    k = jnp.where(a.mask(), a.col, SENTINEL)
+    start, end = row_range(b.row, k)
+    cnt = jnp.where(a.mask(), end - start, 0)
+    off = jnp.cumsum(cnt) - cnt                       # exclusive prefix
+    nprod = jnp.sum(cnt)
+    ok = nprod <= prod_cap
+
+    s = jnp.arange(prod_cap, dtype=jnp.int32)
+    # which A-nonzero does product slot s belong to?
+    t = jnp.searchsorted(off + cnt, s, side="right").astype(jnp.int32)
+    tc = jnp.clip(t, 0, a.cap - 1)
+    b_idx = jnp.clip(start[tc] + (s - off[tc]), 0, b.cap - 1)
+    valid = s < nprod
+
+    out_dtype = sr.out_dtype(a.dtype, b.dtype)
+    rows = jnp.where(valid, a.row[tc], SENTINEL)
+    cols = jnp.where(valid, b.col[b_idx], SENTINEL)
+    vals = sr.mul(a.val[tc], b.val[b_idx]).astype(out_dtype)
+    vdims = vals.shape[1:]
+    vals = jnp.where(valid.reshape((-1,) + (1,) * len(vdims)), vals,
+                     jnp.asarray(sr.add.identity, out_dtype))
+    return rows, cols, vals, nprod, ok
+
+
 def spgemm_esc(a: COO, b: COO, sr: Semiring = ARITHMETIC, *,
                prod_cap: int, out_cap: int,
                order: str = "row") -> Tuple[COO, Array]:
@@ -80,9 +126,11 @@ def spgemm_esc(a: COO, b: COO, sr: Semiring = ARITHMETIC, *,
     rows, cols, vals, nprod, ok = _expand(a, b, sr, prod_cap)
     prods = COO(rows, cols, vals, jnp.minimum(nprod, prod_cap).astype(jnp.int32),
                 (a.shape[0], b.shape[1]), "none")
-    c = prods.dedup(sr.add, order=order).with_cap(out_cap, sr.add.identity)
-    ok = ok & (c.nnz <= out_cap)
-    return c, ok
+    d = prods.dedup(sr.add, order=order)
+    # check the PRE-clamp nnz: with_cap truncates nnz to out_cap, so
+    # testing after the clamp would never detect output overflow
+    ok = ok & (d.nnz <= out_cap)
+    return d.with_cap(out_cap, sr.add.identity), ok
 
 
 def spgemm_dense(a: COO, b: COO, sr: Semiring = ARITHMETIC, *,

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map
 from .coo import COO, SENTINEL
 from .dist import DistSpMat, DistSpVec, DistVec, specs_of
 from .semiring import Monoid, segment_reduce
@@ -22,35 +23,45 @@ Array = jax.Array
 
 
 def mat_apply_local(a: DistSpMat, fn, *, mesh: Mesh) -> DistSpMat:
-    """Apply ``fn: COO -> COO`` (same capacity) tile-wise."""
+    """Apply ``fn: COO -> COO`` (same capacity) tile-wise.
+
+    The result's order tag is whatever ``fn`` reports on the traced tile
+    (COO.order is trace-static), so order-preserving fns keep the invariant.
+    """
+    out_order = []
 
     def body(at):
         t = fn(at.tile())
+        out_order.append(t.order)
         return (t.row[None, None], t.col[None, None], t.val[None, None],
                 t.nnz[None, None])
 
-    row, col, val, nnz = jax.shard_map(
+    row, col, val, nnz = shard_map(
         body, mesh=mesh, in_specs=(specs_of(a),),
         out_specs=(P("row", "col", None), P("row", "col", None),
                    P("row", "col", None), P("row", "col")))(a)
-    return DistSpMat(row, col, val, nnz, a.shape, a.grid)
+    return DistSpMat(row, col, val, nnz, a.shape, a.grid,
+                     order=out_order[0])
 
 
 def mat_ewise_local(a: DistSpMat, b: DistSpMat, fn, *, mesh: Mesh) \
         -> DistSpMat:
     """fn: (COO, COO) -> COO on aligned tiles (same grid) — no comm."""
     assert a.grid == b.grid and a.shape == b.shape
+    out_order = []
 
     def body(at, bt):
         t = fn(at.tile(), bt.tile())
+        out_order.append(t.order)
         return (t.row[None, None], t.col[None, None], t.val[None, None],
                 t.nnz[None, None])
 
-    row, col, val, nnz = jax.shard_map(
+    row, col, val, nnz = shard_map(
         body, mesh=mesh, in_specs=(specs_of(a), specs_of(b)),
         out_specs=(P("row", "col", None), P("row", "col", None),
                    P("row", "col", None), P("row", "col")))(a, b)
-    return DistSpMat(row, col, val, nnz, a.shape, a.grid)
+    return DistSpMat(row, col, val, nnz, a.shape, a.grid,
+                     order=out_order[0])
 
 
 def mat_reduce(a: DistSpMat, axis: int, add: Monoid, *, mesh: Mesh) \
@@ -78,7 +89,7 @@ def mat_reduce(a: DistSpMat, axis: int, add: Monoid, *, mesh: Mesh) \
             piece = red.reshape(q, -1)[k]
         return piece[None, None]
 
-    out = jax.shard_map(body, mesh=mesh, in_specs=(specs_of(a),),
+    out = shard_map(body, mesh=mesh, in_specs=(specs_of(a),),
                         out_specs=P("row", "col", None))(a)
     n = a.shape[0] if axis == 1 else a.shape[1]
     return DistVec(out, n, a.grid, "row" if axis == 1 else "col")
@@ -96,11 +107,11 @@ def mat_scale_cols(a: DistSpMat, v: DistVec, mul=jnp.multiply, *,
         return (t2.row[None, None], t2.col[None, None], t2.val[None, None],
                 t2.nnz[None, None])
 
-    row, col, val, nnz = jax.shard_map(
+    row, col, val, nnz = shard_map(
         body, mesh=mesh, in_specs=(specs_of(a), P("row", "col", None)),
         out_specs=(P("row", "col", None), P("row", "col", None),
                    P("row", "col", None), P("row", "col")))(a, v.data)
-    return DistSpMat(row, col, val, nnz, a.shape, a.grid)
+    return DistSpMat(row, col, val, nnz, a.shape, a.grid, order=a.order)
 
 
 def mat_scale_rows(a: DistSpMat, v: DistVec, mul=jnp.multiply, *,
@@ -115,11 +126,11 @@ def mat_scale_rows(a: DistSpMat, v: DistVec, mul=jnp.multiply, *,
         return (t2.row[None, None], t2.col[None, None], t2.val[None, None],
                 t2.nnz[None, None])
 
-    row, col, val, nnz = jax.shard_map(
+    row, col, val, nnz = shard_map(
         body, mesh=mesh, in_specs=(specs_of(a), P("row", "col", None)),
         out_specs=(P("row", "col", None), P("row", "col", None),
                    P("row", "col", None), P("row", "col")))(a, v.data)
-    return DistSpMat(row, col, val, nnz, a.shape, a.grid)
+    return DistSpMat(row, col, val, nnz, a.shape, a.grid, order=a.order)
 
 
 def mat_transpose(a: DistSpMat, *, mesh: Mesh) -> DistSpMat:
@@ -133,12 +144,15 @@ def mat_transpose(a: DistSpMat, *, mesh: Mesh) -> DistSpMat:
         f = lambda t: jax.lax.ppermute(t, ("row", "col"), perm)
         return (f(at.col), f(at.row), f(at.val), f(at.nnz))
 
-    col, row, val, nnz = jax.shard_map(
+    col, row, val, nnz = shard_map(
         body, mesh=mesh, in_specs=(specs_of(a),),
         out_specs=(P("row", "col", None), P("row", "col", None),
                    P("row", "col", None), P("row", "col")))(a)
-    # note the (col, row) swap above: returned fields are already transposed
-    return DistSpMat(col, row, val, nnz, (a.shape[1], a.shape[0]), a.grid)
+    # note the (col, row) swap above: returned fields are already transposed;
+    # (row, col)-sorted tiles become (col, row)-sorted in the new coordinates
+    t_order = {"row": "col", "col": "row"}.get(a.order, "none")
+    return DistSpMat(col, row, val, nnz, (a.shape[1], a.shape[0]), a.grid,
+                     order=t_order)
 
 
 def mat_select_lower(a: DistSpMat, *, mesh: Mesh, strict=True) -> DistSpMat:
@@ -156,11 +170,11 @@ def mat_select_lower(a: DistSpMat, *, mesh: Mesh, strict=True) -> DistSpMat:
         return (t2.row[None, None], t2.col[None, None], t2.val[None, None],
                 t2.nnz[None, None])
 
-    row, col, val, nnz = jax.shard_map(
+    row, col, val, nnz = shard_map(
         body, mesh=mesh, in_specs=(specs_of(a),),
         out_specs=(P("row", "col", None), P("row", "col", None),
                    P("row", "col", None), P("row", "col")))(a)
-    return DistSpMat(row, col, val, nnz, a.shape, a.grid)
+    return DistSpMat(row, col, val, nnz, a.shape, a.grid, order=a.order)
 
 
 def _prune_mask(t: COO, keep: Array) -> COO:
@@ -169,8 +183,9 @@ def _prune_mask(t: COO, keep: Array) -> COO:
     row = jnp.where(keep[order], t.row[order], SENTINEL)
     col = jnp.where(keep[order], t.col[order], SENTINEL)
     val = jnp.where(keep[order], t.val[order], 0)
+    # stable compaction: surviving entries keep their relative order
     return COO(row, col, val, jnp.sum(keep).astype(jnp.int32), t.shape,
-               "none")
+               t.order)
 
 
 def mat_sum(a: DistSpMat) -> Array:

@@ -1,0 +1,351 @@
+"""Capacity planner — the paper's "rules of thumb", made executable.
+
+CombBLAS 2.0 sizes SpGEMM outputs with a symbolic phase before the numeric
+phase (§4.1) and gives scenario rules for picking data structures and
+algorithm variants (§5, §7). JAX/XLA adds a twist: every buffer is a static
+*capacity*, so a wrong guess either truncates (too small) or wastes memory
+and compile cache (too large). This module centralizes the guessing:
+
+  1. **Estimate** flops and nnz(C) from tile nnz statistics — a cheap
+     symbolic pass over the host-resident ``DistSpMat.nnz`` array (p numbers
+     per operand, no device work), or the exact ``spgemm_flops`` count for
+     single tiles.
+  2. **Derive** ``prod_cap`` / ``out_cap`` with a safety factor, quantized
+     to powers of two so repeated planning reuses compiled executables.
+  3. **Bound** every cap by a true worst case (products can never exceed
+     nnz(A-tile)·nnz(B-tile) per stage; outputs never exceed the dense
+     tile), so overflow-retry terminates.
+  4. **Retry on overflow**: the kernels' ``ok`` flags are checked on the
+     host; a failed attempt re-runs with grown caps instead of returning
+     truncated results.
+  5. **Pick variants** by the paper's rules of thumb (DESIGN.md §4.6):
+     deferred vs incremental merge by product-buffer memory, rotation vs
+     allgather by gathered-operand memory, SpMV vs SpMSpV (and the local
+     SpMSpV data structure) by frontier density (§4.5, Fig 3).
+
+Apps call ``spgemm`` / ``spmspv`` below with NO capacity arguments; explicit
+caps remain available as overrides and short-circuit the estimator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .coo import COO
+from .dist import DistSpMat, DistSpVec
+from .local_spgemm import compression_ratio, spgemm_flops
+from .semiring import ARITHMETIC, Semiring
+from .spgemm import spgemm_2d as _spgemm_2d
+from .spmv import spmspv as _spmspv_2d
+
+# Per-device scratch budget for planner decisions, in *entries* (a COO entry
+# is ~16 bytes with indices): ~64 MB. Crossing it flips the memory-saving
+# variant choices; it never bounds correctness (caps still grow on retry).
+MEM_BUDGET_ENTRIES = 1 << 22
+
+
+def _pow2(x: float, lo: int = 64) -> int:
+    """Round up to a power of two (compile-cache-friendly cap quantization)."""
+    return max(lo, 1 << math.ceil(math.log2(max(float(x), 1.0))))
+
+
+def _host_nnz(a) -> np.ndarray:
+    return np.asarray(jax.device_get(a.nnz), np.float64)
+
+
+# --------------------------------------------------------------------------
+# distributed SpGEMM
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SpGEMMPlan:
+    prod_cap: int          # per-stage expansion slots per device
+    out_cap: int           # merged output entries per device
+    variant: str           # 'rotation' | 'allgather'
+    merge: str             # 'deferred' | 'incremental'
+    prod_ceiling: int      # worst-case bound — retry growth stops here
+    out_ceiling: int
+    est_flops: float       # estimated peak per-device per-stage products
+    est_out: float         # estimated peak per-device nnz(C)
+    attempts: int = 1      # how many numeric attempts the retry loop used
+
+    def grown(self, factor: int = 4) -> "SpGEMMPlan":
+        if (self.prod_cap >= self.prod_ceiling
+                and self.out_cap >= self.out_ceiling):
+            raise RuntimeError(
+                "SpGEMM overflow at worst-case capacities "
+                f"(prod_cap={self.prod_cap}, out_cap={self.out_cap}) — "
+                "the ok flags disagree with the symbolic bound")
+        return dataclasses.replace(
+            self,
+            prod_cap=min(self.prod_cap * factor, self.prod_ceiling),
+            out_cap=min(self.out_cap * factor, self.out_ceiling),
+            attempts=self.attempts + 1)
+
+
+def plan_spgemm(a: DistSpMat, b: DistSpMat | None = None, *,
+                safety: float = 4.0,
+                prod_cap: int | None = None, out_cap: int | None = None,
+                variant: str | None = None, merge: str | None = None,
+                mem_budget: int = MEM_BUDGET_ENTRIES) -> SpGEMMPlan:
+    """Size and configure a 2D SpGEMM from tile nnz statistics.
+
+    The estimate assumes entries spread uniformly over tile columns (the
+    random-permutation load-balance story of §2.3); skewed inputs are caught
+    by the overflow flags and absorbed by the safety factor + retry growth.
+    """
+    b = a if b is None else b
+    q = a.pr
+    na = _host_nnz(a).reshape(q, q)
+    nb_ = _host_nnz(b).reshape(q, q)
+    inner = float(max(a.nb, 1))            # contraction dim of one tile pair
+
+    # stage (i, j, k) multiplies A(i,k) · B(k,j): expected products under
+    # uniform column occupancy, exact upper bound nnz_a * nnz_b
+    pair = na[:, :, None] * nb_[None, :, :]          # [i, k, j] -> products
+    stage_est = float(pair.max()) / inner
+    stage_bound = float(pair.max())
+    # per-device output: flops estimate summed over stages, capped by the
+    # dense C tile (distinct (row, col) pairs cannot exceed it)
+    flops_dev = np.einsum("ik,kj->ij", na, nb_) / inner
+    dense_tile = float(a.mb) * float(b.nb)
+    out_est = float(min(flops_dev.max(), dense_tile))
+
+    p_ceil = _pow2(stage_bound)
+    o_ceil = _pow2(min(stage_bound * q, dense_tile))
+    p_cap = min(_pow2(prod_cap or safety * stage_est), p_ceil)
+    o_cap = min(_pow2(out_cap or safety * out_est), o_ceil)
+    if prod_cap:
+        p_cap = max(p_cap, _pow2(prod_cap))   # explicit override wins
+        p_ceil = max(p_ceil, p_cap)
+    if out_cap:
+        o_cap = max(o_cap, _pow2(out_cap))
+        o_ceil = max(o_ceil, o_cap)
+
+    # rules of thumb (DESIGN.md §4.6): allgather materializes q stage
+    # operands at once — fine on small grids, memory-hostile at scale;
+    # deferred merge buffers q·prod_cap products for one sort — flip to
+    # incremental when that exceeds the scratch budget.
+    if variant is None:
+        variant = "allgather" if q * (a.cap + b.cap) <= mem_budget \
+            else "rotation"
+    if merge is None:
+        merge = "deferred" if q * p_cap <= mem_budget else "incremental"
+    return SpGEMMPlan(p_cap, o_cap, variant, merge, p_ceil, o_ceil,
+                      stage_est, out_est)
+
+
+def spgemm(a: DistSpMat, b: DistSpMat | None = None,
+           sr: Semiring = ARITHMETIC, *, mesh,
+           plan: SpGEMMPlan | None = None,
+           prod_cap: int | None = None, out_cap: int | None = None,
+           variant: str | None = None, merge: str | None = None,
+           safety: float = 4.0, max_attempts: int = 6, growth: int = 4):
+    """Planned C = A ⊕.⊗ B. Returns (C, plan-with-attempt-count).
+
+    An overflowing attempt (any device's ``ok`` flag false) is retried with
+    caps grown ×``growth`` toward the worst-case ceiling — never a silently
+    truncated result. Caps quantize to powers of two, so steady-state
+    iterative callers (HipMCL) reuse the compiled executable.
+    """
+    b = a if b is None else b
+    p = plan if plan is not None else plan_spgemm(
+        a, b, safety=safety, prod_cap=prod_cap, out_cap=out_cap,
+        variant=variant, merge=merge)
+    while True:
+        c, ok = _spgemm_2d(a, b, sr, mesh=mesh, prod_cap=p.prod_cap,
+                                  out_cap=p.out_cap, variant=p.variant,
+                                  merge=p.merge)
+        if bool(jnp.all(ok)):
+            return c, p
+        if p.attempts >= max_attempts:
+            raise RuntimeError(
+                f"SpGEMM still overflowing after {p.attempts} attempts "
+                f"(prod_cap={p.prod_cap}, out_cap={p.out_cap})")
+        p = p.grown(growth)
+
+
+# --------------------------------------------------------------------------
+# distributed SpMSpV / SpMV
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SpMSpVPlan:
+    prod_cap: int
+    out_cap: int
+    variant: str           # local kernel: 'sort' | 'bucket' | 'spa'
+    merge: str             # 'sparse' | 'dense'
+    use_spmv: bool         # rule of thumb: dense SpMV beats SpMSpV here
+    prod_ceiling: int
+    out_ceiling: int
+    density: float
+    attempts: int = 1
+
+    def grown(self, factor: int = 4) -> "SpMSpVPlan":
+        if (self.prod_cap >= self.prod_ceiling
+                and self.out_cap >= self.out_ceiling):
+            raise RuntimeError(
+                "SpMSpV overflow at worst-case capacities "
+                f"(prod_cap={self.prod_cap}, out_cap={self.out_cap})")
+        return dataclasses.replace(
+            self,
+            prod_cap=min(self.prod_cap * factor, self.prod_ceiling),
+            out_cap=min(self.out_cap * factor, self.out_ceiling),
+            attempts=self.attempts + 1)
+
+
+def spmspv_variant_for_density(density: float) -> str:
+    """Fig-3 rule of thumb (§4.5): sort ≲0.5%, bucket ≲10%, SPA above."""
+    if density < 0.005:
+        return "sort"
+    if density < 0.10:
+        return "bucket"
+    return "spa"
+
+
+def plan_spmspv(a: DistSpMat, frontier_nnz: int, *, safety: float = 4.0,
+                prod_cap: int | None = None, out_cap: int | None = None,
+                variant: str | None = None, merge: str | None = None,
+                add_tag: str | None = None) -> SpMSpVPlan:
+    """Size y = A·x for a sparse x with ``frontier_nnz`` stored entries.
+
+    Expected per-device products = nnz(A_tile) · frontier density (each
+    frontier column activates its share of tile entries); the exact worst
+    case is the full tile, which bounds retry growth. ``add_tag`` (the
+    semiring's add-monoid tag, if the caller knows it) lets the dense-merge
+    rule of thumb apply — psum_scatter merging needs a 'sum' monoid.
+    """
+    nt = _host_nnz(a)
+    max_tile = float(nt.max()) if nt.size else 1.0
+    pc = a.grid[1]
+    n = max(a.shape[1], 1)
+    f = max(int(frontier_nnz), 1)
+    density = f / n
+    est = max(max_tile * density, 1.0)
+    p_ceil = _pow2(max_tile)
+    # worst case for out_cap: the sparse merge buckets entries by
+    # destination piece with out_cap // pc slots each, and ALL of a
+    # partial's entries (≤ min(max_tile, mb)) may target one piece — the
+    # ceiling therefore carries a ×pc factor, or skewed outputs would hit
+    # the ceiling with ok still false and the retry loop would give up
+    o_ceil = _pow2(min(max_tile, float(a.mb)) * pc)
+    p_cap = min(_pow2(prod_cap or safety * est), p_ceil)
+    o_cap = min(_pow2(out_cap or safety * est * pc), o_ceil)
+    if prod_cap:
+        p_cap = max(p_cap, _pow2(prod_cap))
+        p_ceil = max(p_ceil, p_cap)
+    if out_cap:
+        o_cap = max(o_cap, _pow2(out_cap))
+        o_ceil = max(o_ceil, o_cap)
+    use_spmv = density > 0.30    # §4.5: SpMSpV stays competitive far past
+    #                              where intuition says to switch
+    if merge is None:
+        # the SpMV rule of thumb made executable: for dense-ish frontiers
+        # the dense-accumulator local kernel + psum_scatter merge IS the
+        # classic SpMV pipeline (requires a natively-reducible monoid)
+        merge = "dense" if use_spmv and add_tag == "sum" else "sparse"
+    return SpMSpVPlan(
+        prod_cap=p_cap, out_cap=o_cap,
+        variant=variant or spmspv_variant_for_density(density),
+        merge=merge,
+        use_spmv=use_spmv,
+        prod_ceiling=p_ceil,
+        out_ceiling=o_ceil,
+        density=density)
+
+
+def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring, *, mesh,
+           plan: SpMSpVPlan | None = None,
+           prod_cap: int | None = None, out_cap: int | None = None,
+           variant: str | None = None, merge: str | None = None,
+           safety: float = 4.0, max_attempts: int = 6, growth: int = 4):
+    """Planned y = A·x (sparse x). Returns (DistSpVec, plan).
+
+    Plans from the *current* frontier size (one host scalar), so iterative
+    callers (BFS) get caps that track the frontier; power-of-two
+    quantization keeps the number of distinct compilations logarithmic.
+    """
+    p = plan if plan is not None else plan_spmspv(
+        a, int(jax.device_get(jnp.sum(x.nnz))), safety=safety,
+        prod_cap=prod_cap, out_cap=out_cap, variant=variant, merge=merge,
+        add_tag=sr.add.tag)
+    while True:
+        y, ok = _spmspv_2d(a, x, sr, mesh=mesh, variant=p.variant,
+                             merge=p.merge, prod_cap=p.prod_cap,
+                             out_cap=p.out_cap)
+        if bool(jnp.all(ok)):
+            return y, p
+        if p.attempts >= max_attempts:
+            raise RuntimeError(
+                f"SpMSpV still overflowing after {p.attempts} attempts "
+                f"(prod_cap={p.prod_cap}, out_cap={p.out_cap})")
+        p = p.grown(growth)
+
+
+def spmv_variant(a: DistSpMat) -> str:
+    """Local SpMV flavor whose required sort order the tile already has.
+
+    Row-partitioned SpMV wants row-major tiles, col-partitioned wants
+    col-major (§4.2); matching the maintained order tag makes the kernel's
+    sort a no-op.
+    """
+    return "col" if a.order == "col" else "row"
+
+
+# --------------------------------------------------------------------------
+# local (single-tile) planning — benchmarks and non-distributed callers
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LocalSpGEMMPlan:
+    prod_cap: int
+    out_cap: int
+    algo: str              # 'esc' | 'dense'
+    flops: int             # exact symbolic count
+    ratio: float           # estimated compression ratio
+
+
+def plan_local_spgemm(a: COO, b: COO, *, safety: float = 1.25,
+                      dense_threshold: float = 4.0,
+                      dense_tile_limit: int = 1 << 22) -> LocalSpGEMMPlan:
+    """Exact symbolic phase for one tile pair (paper §4.1 phase 1).
+
+    ``spgemm_flops`` is exact, so ``prod_cap`` cannot overflow; ``out_cap``
+    is bounded by min(flops, dense tile). The algo pick mirrors
+    ``spgemm_auto``'s compression-ratio hybrid.
+    """
+    m, n = a.shape[0], b.shape[1]
+    fl = int(jax.device_get(spgemm_flops(a, b)))
+    ratio = float(jax.device_get(compression_ratio(a, b)))
+    prod_cap = _pow2(max(fl, 1) * safety)
+    out_cap = min(_pow2(min(max(fl, 1), m * n) * safety), _pow2(m * n))
+    algo = "dense" if (ratio >= dense_threshold and m * n <= dense_tile_limit) \
+        else "esc"
+    return LocalSpGEMMPlan(prod_cap, out_cap, algo, fl, ratio)
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSpMSpVPlan:
+    prod_cap: int
+    out_cap: int
+    variant: str
+    use_spmv: bool
+    density: float
+
+
+def plan_local_spmspv(a: COO, frontier_nnz: int, *,
+                      safety: float = 4.0) -> LocalSpMSpVPlan:
+    n = max(a.shape[1], 1)
+    density = max(int(frontier_nnz), 1) / n
+    nnz = int(jax.device_get(a.nnz))
+    est = max(nnz * density, 1.0)
+    prod_cap = min(_pow2(safety * est), _pow2(max(nnz, 1)))
+    out_cap = min(_pow2(safety * est), _pow2(a.shape[0]))
+    return LocalSpMSpVPlan(prod_cap, out_cap,
+                           spmspv_variant_for_density(density),
+                           density > 0.30, density)

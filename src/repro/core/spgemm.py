@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import pvary, shard_map
 from .coo import COO, SENTINEL
 from .dist import DistSpMat, DistSpMat3D, specs_of
 from .local_spgemm import _expand
@@ -61,15 +62,19 @@ def _tile_permute(tile: COO, axes, perm) -> COO:
     c = jax.lax.ppermute(tile.col, axes, perm)
     v = jax.lax.ppermute(tile.val, axes, perm)
     n = jax.lax.ppermute(tile.nnz, axes, perm)
-    return COO(r, c, v, n, tile.shape, "none")
+    # whole tiles move between devices; each one keeps its internal order
+    return COO(r, c, v, n, tile.shape, tile.order)
 
 
 def _merge_products(rows, cols, vals, nvalid, shape, sr, out_cap, order="row"):
     prods = COO(rows, cols, vals,
                 jnp.minimum(nvalid, rows.shape[0]).astype(jnp.int32),
                 shape, "none")
-    c = prods.dedup(sr.add, order=order).with_cap(out_cap, sr.add.identity)
-    return c, (c.nnz <= out_cap)
+    d = prods.dedup(sr.add, order=order)
+    # overflow must be read from the PRE-clamp nnz: with_cap() truncates
+    # nnz to out_cap, which would make this check vacuously true
+    ok = d.nnz <= out_cap
+    return d.with_cap(out_cap, sr.add.identity), ok
 
 
 def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
@@ -86,9 +91,9 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
 
         def stage(s):
             at = COO(ar.row[s], ar.col[s], ar.val[s], ar.nnz[s],
-                     a_tile.shape, "none")
+                     a_tile.shape, a_tile.order)
             bt = COO(bc.row[s], bc.col[s], bc.val[s], bc.nnz[s],
-                     b_tile.shape, "none")
+                     b_tile.shape, b_tile.order)
             return _expand(at, bt, sr, stage_cap)
 
         outs = [stage(s) for s in range(q)]
@@ -99,8 +104,8 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
         ok = jnp.all(jnp.stack([o[4] for o in outs]))
         # compact: products are per-stage padded; dedup handles scattering
         c, ok2 = _merge_products(rows, cols, vals, total, shape, sr, out_cap)
-        # nvalid above counts only真 entries; dedup sorts padding to the end,
-        # but nnz must count actual valid products:
+        # nvalid above counts only real entries; dedup sorts padding to the
+        # end, but nnz must count actual valid products:
         return c, ok & ok2
 
     # rotation (Cannon)
@@ -112,8 +117,8 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
         acc = COO.empty(shape, out_cap, dtype=vals_dtype(sr, a_tile, b_tile),
                         fill=sr.add.identity)
         # constants entering a shard_map scan carry must be marked varying
-        acc = jax.tree.map(
-            lambda x: jax.lax.pcast(x, ("row", "col"), to="varying"), acc)
+        # (newer jax; identity on 0.4.x — see compat.pvary)
+        acc = jax.tree.map(lambda x: pvary(x, ("row", "col")), acc)
 
         def body(carry, _):
             at, bt, acc, ok = carry
@@ -121,15 +126,16 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
             both_r = jnp.concatenate([acc.row, r])
             both_c = jnp.concatenate([acc.col, c])
             both_v = jnp.concatenate([acc.val, v])
-            merged = COO(both_r, both_c, both_v, acc.nnz + jnp.minimum(n, stage_cap),
-                         shape, "none").dedup(sr.add).with_cap(
-                             out_cap, sr.add.identity)
-            ok = ok & okx & (merged.nnz <= out_cap)
+            d = COO(both_r, both_c, both_v,
+                    acc.nnz + jnp.minimum(n, stage_cap),
+                    shape, "none").dedup(sr.add)
+            ok = ok & okx & (d.nnz <= out_cap)   # pre-clamp nnz (see above)
+            merged = d.with_cap(out_cap, sr.add.identity)
             at = _tile_permute(at, "col", _shift_perm(q, q, left=True))
             bt = _tile_permute(bt, "row", _shift_perm(q, q, left=True))
             return (at, bt, merged, ok), None
 
-        ok0 = jax.lax.pcast(jnp.bool_(True), ("row", "col"), to="varying")
+        ok0 = pvary(jnp.bool_(True), ("row", "col"))
         (at, bt, acc, ok), _ = jax.lax.scan(
             body, (a_skew, b_skew, acc, ok0), None, length=q)
         return acc, ok
@@ -167,21 +173,23 @@ def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
         c, ok = _local_spgemm_2d(
             COO(at.row.reshape(-1), at.col.reshape(-1),
                 at.val.reshape((-1,) + at.val.shape[3:]), at.nnz.reshape(()),
-                (a.mb, a.nb), "none"),
+                (a.mb, a.nb), a.order),
             COO(bt.row.reshape(-1), bt.col.reshape(-1),
                 bt.val.reshape((-1,) + bt.val.shape[3:]), bt.nnz.reshape(()),
-                (b.mb, b.nb), "none"),
+                (b.mb, b.nb), b.order),
             sr, q, prod_cap, out_cap, variant, merge)
         return (c.row[None, None], c.col[None, None], c.val[None, None],
                 c.nnz[None, None], ok[None, None])
 
     out_specs = (P("row", "col", None), P("row", "col", None),
                  P("row", "col", None), P("row", "col"), P("row", "col"))
-    f = jax.shard_map(body, mesh=mesh,
+    f = shard_map(body, mesh=mesh,
                       in_specs=(specs_of(a), specs_of(b)),
                       out_specs=out_specs)
     row, col, val, nnz, ok = f(a, b)
-    cmat = DistSpMat(row, col, val, nnz, (a.shape[0], b.shape[1]), a.grid)
+    # every merge path ends in dedup(order='row'), so C keeps the invariant
+    cmat = DistSpMat(row, col, val, nnz, (a.shape[0], b.shape[1]), a.grid,
+                     order="row")
     return cmat, ok
 
 
@@ -204,10 +212,10 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
     def body(at, bt):
         a_tile = COO(at.row.reshape(-1), at.col.reshape(-1),
                      at.val.reshape(-1), at.nnz.reshape(()),
-                     (tr_a, tc_a), "none")
+                     (tr_a, tc_a), a3.order)
         b_tile = COO(bt.row.reshape(-1), bt.col.reshape(-1),
                      bt.val.reshape(-1), bt.nnz.reshape(()),
-                     (tr_b, tc_b), "none")
+                     (tr_b, tc_b), b3.order)
         # per-layer 2D multiply ('row'/'col' collectives are layer-local)
         c_part, ok = _local_spgemm_2d(a_tile, b_tile, sr, q,
                                       prod_cap, prod_cap, variant, "deferred")
@@ -247,10 +255,11 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
         # localize columns to my sub-block and merge
         valid = buf_r != SENTINEL
         lc = jnp.where(valid, buf_c - my_layer * kbl, SENTINEL)
-        merged = COO(jnp.where(valid, buf_r, SENTINEL), lc, buf_v,
-                     jnp.sum(valid).astype(jnp.int32), (tr_a, kbl),
-                     "none").dedup(sr.add).with_cap(out_cap, sr.add.identity)
-        ok = ok & (merged.nnz <= out_cap)
+        d = COO(jnp.where(valid, buf_r, SENTINEL), lc, buf_v,
+                jnp.sum(valid).astype(jnp.int32), (tr_a, kbl),
+                "none").dedup(sr.add)
+        ok = ok & (d.nnz <= out_cap)             # pre-clamp nnz
+        merged = d.with_cap(out_cap, sr.add.identity)
         return (merged.row[None, None, None], merged.col[None, None, None],
                 merged.val[None, None, None], merged.nnz[None, None, None],
                 ok[None, None, None])
@@ -259,11 +268,12 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
                  P("layer", "row", "col", None),
                  P("layer", "row", "col", None),
                  P("layer", "row", "col"), P("layer", "row", "col"))
-    f = jax.shard_map(body, mesh=mesh,
+    f = shard_map(body, mesh=mesh,
                       in_specs=(specs_of(a3), specs_of(b3)),
                       out_specs=out_specs)
     row, col, val, nnz, ok = f(a3, b3)
-    c3 = DistSpMat3D(row, col, val, nnz, c_shape, a3.grid, "csub")
+    c3 = DistSpMat3D(row, col, val, nnz, c_shape, a3.grid, "csub",
+                     order="row")  # final inter-layer merge is a row dedup
     return c3, ok
 
 
@@ -282,12 +292,7 @@ def spgemm_2d_batched(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC,
     slab = -(-nb_cols // nbatch)
     outs = []
     for t in range(nbatch):
-        lo = t * slab
-
-        def keep_fn(tile_cols):
-            return (tile_cols >= lo) & (tile_cols < lo + slab)
-
-        bt = _restrict_cols(b, lo, slab)
+        bt = _restrict_cols(b, t * slab, slab)
         c, ok = spgemm_2d(a, bt, sr, mesh=mesh, prod_cap=prod_cap,
                           out_cap=out_cap, variant=variant)
         outs.append((c, ok))
@@ -297,10 +302,11 @@ def spgemm_2d_batched(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC,
 def _restrict_cols(b: DistSpMat, lo: int, width: int) -> DistSpMat:
     """Zero out entries outside tile-local columns [lo, lo+width)."""
     keep = (b.col >= lo) & (b.col < lo + width) & (b.col != SENTINEL)
-    # compact each tile: sort kept-first along the cap axis
+    # compact each tile: sort kept-first along the cap axis; the stable
+    # compaction preserves each tile's entry order, so the order tag survives
     order = jnp.argsort(~keep, axis=-1, stable=True)
     row = jnp.take_along_axis(jnp.where(keep, b.row, SENTINEL), order, -1)
     col = jnp.take_along_axis(jnp.where(keep, b.col, SENTINEL), order, -1)
     val = jnp.take_along_axis(jnp.where(keep, b.val, 0), order, -1)
     nnz = jnp.sum(keep, axis=-1).astype(jnp.int32)
-    return DistSpMat(row, col, val, nnz, b.shape, b.grid)
+    return DistSpMat(row, col, val, nnz, b.shape, b.grid, order=b.order)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map
 from .coo import COO
 from .dist import DistSpMat, DistVec, specs_of
 from .semiring import ARITHMETIC, Semiring, segment_reduce
@@ -57,7 +58,7 @@ def spmm_15d(a: DistSpMat, x: DistVec, sr: Semiring = ARITHMETIC, *,
             y_piece = red.reshape((pc, -1) + red.shape[1:])[j]
         return y_piece[None, None]
 
-    out = jax.shard_map(body, mesh=mesh,
+    out = shard_map(body, mesh=mesh,
                         in_specs=(specs_of(a), P("row", "col", None, None)),
                         out_specs=P("row", "col", None, None))(a, x.data)
     return DistVec(out, a.shape[0], a.grid, "row")
@@ -100,6 +101,6 @@ def spmm_2d(a: DistSpMat, x: Array, sr: Semiring = ARITHMETIC, *,
             y = red.reshape((pc, -1) + red.shape[1:])[j]
         return y
 
-    return jax.shard_map(body, mesh=mesh,
+    return shard_map(body, mesh=mesh,
                          in_specs=(specs_of(a), P("col", "row")),
                          out_specs=P(("row", "col"), None))(a, x)

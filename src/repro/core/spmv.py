@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map
 from .coo import COO, SENTINEL
 from .dist import DistSpMat, DistSpVec, DistVec, specs_of
 from .semiring import ARITHMETIC, Monoid, Semiring, segment_reduce
@@ -46,7 +47,7 @@ def transpose_layout(v: DistVec, *, mesh: Mesh) -> DistVec:
     def body(d):
         return jax.lax.ppermute(d, ("row", "col"), perm)
 
-    out = jax.shard_map(body, mesh=mesh, in_specs=P("row", "col", None),
+    out = shard_map(body, mesh=mesh, in_specs=P("row", "col", None),
                         out_specs=P("row", "col", None))(v.data)
     new_layout = "row" if v.layout == "col" else "col"
     return DistVec(out, v.n, v.grid, new_layout)
@@ -77,7 +78,7 @@ def spmv(a: DistSpMat, x: DistVec, sr: Semiring = ARITHMETIC, *,
             y_piece = piece
         return y_piece[None, None]
 
-    out = jax.shard_map(body, mesh=mesh,
+    out = shard_map(body, mesh=mesh,
                         in_specs=(specs_of(a), P("row", "col", None)),
                         out_specs=P("row", "col", None))(a, x.data)
     return DistVec(out, a.shape[0], a.grid, "row")
@@ -129,6 +130,9 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring = ARITHMETIC, *,
             dense = L.spvec_to_dense(yi, yv, mb, zero=0)
             piece = jax.lax.psum_scatter(dense, "col", scatter_dimension=0,
                                          tiled=True)
+            # spvec_from_dense clamps nnz to out_cap — detect the overflow
+            # before re-sparsifying or truncation would be silent
+            ok = ok & (jnp.sum(piece != 0) <= out_cap)
             pi, pv, pn = L.spvec_from_dense(piece, out_cap, zero=0)
             return pi[None, None], pv[None, None], pn[None, None], \
                 ok[None, None]
@@ -159,16 +163,17 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring = ARITHMETIC, *,
         j = jax.lax.axis_index("col")
         valid = bi != SENTINEL
         li = jnp.where(valid, bi - j * vb_out, SENTINEL)
-        merged = COO(li, jnp.where(valid, 0, SENTINEL), bv,
-                     jnp.sum(valid).astype(jnp.int32), (vb_out, 1),
-                     "none").dedup(sr.add).with_cap(out_cap, sr.add.identity)
-        ok = ok & (merged.nnz <= out_cap)
+        d = COO(li, jnp.where(valid, 0, SENTINEL), bv,
+                jnp.sum(valid).astype(jnp.int32), (vb_out, 1),
+                "none").dedup(sr.add)
+        ok = ok & (d.nnz <= out_cap)             # pre-clamp nnz
+        merged = d.with_cap(out_cap, sr.add.identity)
         return merged.row[None, None], merged.val[None, None], \
             merged.nnz[None, None], ok[None, None]
 
     out_specs = (P("row", "col", None), P("row", "col", None),
                  P("row", "col"), P("row", "col"))
-    yi, yv, yn, ok = jax.shard_map(
+    yi, yv, yn, ok = shard_map(
         body, mesh=mesh,
         in_specs=(specs_of(a), P("row", "col", None), P("row", "col", None),
                   P("row", "col")),
@@ -186,7 +191,7 @@ def transpose_spvec_layout(v: DistSpVec, *, mesh: Mesh) -> DistSpVec:
         f = lambda t: jax.lax.ppermute(t, ("row", "col"), perm)
         return f(xi), f(xv), f(xn)
 
-    yi, yv, yn = jax.shard_map(
+    yi, yv, yn = shard_map(
         body, mesh=mesh,
         in_specs=(P("row", "col", None), P("row", "col", None),
                   P("row", "col")),

@@ -1,0 +1,8 @@
+"""repro.dist — distributed training utilities for the LM pillar.
+
+Currently provides gradient compression (``compression``); the sharding
+plan/spec module (``shardings``) referenced by launch/mesh.py and
+models/model.py is future work — importing it raises ImportError, which the
+dry-run reports as a skipped cell rather than silently mis-sharding.
+"""
+from . import compression

@@ -1,0 +1,60 @@
+"""Gradient compression for bandwidth-bound data parallelism (DESIGN.md §5).
+
+Two standard schemes, both pytree-polymorphic and jit-safe:
+
+- ``int8_quantize``: per-tensor symmetric int8 quantize-dequantize. The
+  returned tree is float again (ready for the optimizer); the int8 payload
+  is what would cross the wire, so round-trip error ≤ max|g|/254.
+- ``make_topk_error_feedback``: magnitude top-k sparsification with error
+  feedback [Stich et al.]: the residual (what was NOT sent) is carried in
+  state and added back next step, so mass is preserved exactly:
+  ``kept + residual == grad + old_residual``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_quantize(tree):
+    """Symmetric per-tensor int8 round trip: dequantized float tree."""
+
+    def one(x):
+        scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-30)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return (q.astype(x.dtype) * scale).astype(x.dtype)
+
+    return jax.tree.map(one, tree)
+
+
+def make_topk_error_feedback(frac: float = 0.01):
+    """Returns (init, compress) for top-``frac`` sparsification w/ feedback.
+
+    init(grads)            -> zero residual state (same structure)
+    compress(grads, state) -> (kept, new_state); kept has ~frac·size
+                              nonzeros per leaf, kept + new_state ==
+                              grads + state exactly.
+    """
+
+    def init(tree):
+        return jax.tree.map(jnp.zeros_like, tree)
+
+    def compress(tree, state):
+        leaves, treedef = jax.tree.flatten(tree)
+        res_leaves = treedef.flatten_up_to(state)
+        kept_out, res_out = [], []
+        for x, r in zip(leaves, res_leaves):
+            e = x + r
+            k = max(1, int(round(frac * e.size)))
+            mag = jnp.abs(e).ravel()
+            # threshold = k-th largest magnitude; ties beyond k are kept
+            # (slightly more sent, never silently dropped)
+            thresh = jax.lax.top_k(mag, k)[0][-1]
+            keep = jnp.abs(e) >= thresh
+            kept = jnp.where(keep, e, jnp.zeros((), e.dtype))
+            kept_out.append(kept)
+            res_out.append(e - kept)
+        return (jax.tree.unflatten(treedef, kept_out),
+                jax.tree.unflatten(treedef, res_out))
+
+    return init, compress

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.compat import tpu_compiler_params
+
 
 def _kernel(cols_ref, vals_ref, x_ref, o_ref):
     k = pl.program_id(2)
@@ -66,7 +68,7 @@ def bsr_spmm(block_cols, block_vals, x, *, bn: int = 128,
                                    lambda r, j, k, cols: (r, 0, j)),
         ),
         out_shape=jax.ShapeDtypeStruct((R, bm, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(block_cols, block_vals, x).reshape(R * bm, n)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.compat import tpu_compiler_params
+
 IDENTITY = dict(plus_times=0.0, min_plus=jnp.inf, max_min=-jnp.inf,
                 or_and=False)
 
@@ -78,7 +80,7 @@ def semiring_matmul(a, b, *, kind: str = "plus_times", bm: int = 128,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.compat import tpu_compiler_params
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref):
     x = x_ref[0, :, 0, :].astype(jnp.float32)        # (q, P)
@@ -73,7 +75,7 @@ def ssd_chunk(xc, dtc, A, Bc, Cc, *, interpret: bool = True):
             jax.ShapeDtypeStruct((G, q, H, P), jnp.float32),
             jax.ShapeDtypeStruct((G, H, P, N), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xc, dtc, A, Bc, Cc)

@@ -25,9 +25,8 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"{len(devices)} — run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             f"(launch/dryrun.py does this for you)")
-    return jax.make_mesh(
-        shape, axes, devices=devices[:ndev],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from ..core import compat
+    return compat.make_mesh(shape, axes, devices=devices[:ndev])
 
 
 def make_plan(cfg, *, multi_pod: bool = False, shape_kind: str = "train",

@@ -462,7 +462,8 @@ def moe_block_ep(x, params, cfg: ModelConfig, plan) -> tuple[Array, Array]:
 
     from jax.sharding import PartitionSpec as P
     dp_spec = dp if len(dp) > 1 else dp[0]
-    y, aux = jax.shard_map(
+    from ..core.compat import shard_map as _shard_map
+    y, aux = _shard_map(
         body, mesh=plan.mesh,
         in_specs=(P(dp_spec, None, None), P(None, None),
                   P(m, None, None), P(m, None, None), P(m, None, None)),

@@ -1,0 +1,45 @@
+"""Graceful degradation when hypothesis is not installed.
+
+``pytest.importorskip("hypothesis")`` at module scope would skip entire
+files, losing every deterministic oracle test that happens to share a module
+with a property test. Instead, test modules do
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, st
+
+and ONLY the ``@given``-decorated property tests skip (each one calls
+``pytest.importorskip`` at run time, so the skip reason points at
+requirements-dev.txt).
+"""
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        def skipper(self=None, *a, **k):
+            pytest.importorskip(
+                "hypothesis",
+                reason="property test needs hypothesis "
+                       "(pip install -r requirements-dev.txt)")
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        return skipper
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+class _Strategy:
+    """Accepts any strategy construction; never actually draws."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _Strategy()

@@ -23,18 +23,17 @@ def main(tmp):
     rng = np.random.default_rng(0)
     tree = {"w1": rng.standard_normal((16, 32)).astype(np.float32),
             "w2": rng.standard_normal((64,)).astype(np.float32)}
-    mesh_a = jax.make_mesh((2, 4), ("data", "model"),
-                           devices=jax.devices()[:8],
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core import compat
+    mesh_a = compat.make_mesh((2, 4), ("data", "model"),
+                              devices=jax.devices()[:8])
     specs = {"w1": P("data", "model"), "w2": P("data")}
     sharded = {k: jax.device_put(v, NamedSharding(mesh_a, specs[k]))
                for k, v in tree.items()}
     save_checkpoint(ckpt, 42, sharded)
 
     # "cluster changed": new mesh with a different shape
-    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                           devices=jax.devices()[:8],
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_b = compat.make_mesh((4, 2), ("data", "model"),
+                              devices=jax.devices()[:8])
     like = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
             for k, v in tree.items()}
     restored, step = reshard_restore(ckpt, like, mesh=mesh_b, specs=specs)

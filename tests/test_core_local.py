@@ -3,7 +3,11 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade: property tests importorskip at run
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import semiring as S
 from repro.core.coo import COO, SENTINEL, ewise_intersect, ewise_union

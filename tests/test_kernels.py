@@ -3,7 +3,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade: property tests importorskip at run
+    from _hypothesis_stub import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.bsr_spmm import bsr_spmm, to_blocked_ell

@@ -1,0 +1,218 @@
+"""Capacity planner + order-invariant + batched SpGEMM tests (1×1 grid).
+
+Covers the three contracts of the planner refactor:
+  - apps need no capacity arguments; overflowing first attempts retry with
+    grown caps instead of returning truncated results;
+  - tiles flowing through assembly / spgemm / matops carry ``order='row'``
+    end-to-end (checked against the actual device arrays, not just the tag);
+  - ``spgemm_2d_batched`` column slabs concatenate to the unbatched result.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import ARITHMETIC, DistSpMat, make_grid
+from repro.core.coo import SENTINEL
+from repro.core.matops import (mat_apply_local, mat_ewise_local,
+                               mat_select_lower, mat_transpose)
+from repro.core.plan import (SpGEMMPlan, plan_local_spgemm, plan_spgemm,
+                             plan_spmspv, spgemm as spgemm_planned,
+                             spmspv_variant_for_density, spmv_variant)
+from repro.core.spgemm import _restrict_cols, spgemm_2d, spgemm_2d_batched
+from repro.io import rmat_coo
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_grid(1, 1)
+
+
+def make_graph(n=40, density=0.1, seed=0):
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((n, n)) < density).astype(np.float32)
+    np.fill_diagonal(dense, 0)
+    dense = np.maximum(dense, dense.T)
+    r, c = np.nonzero(dense)
+    return dense, (r.astype(np.int64), c.astype(np.int64),
+                   dense[r, c].astype(np.float32))
+
+
+def assert_row_sorted(m: DistSpMat):
+    """Tag says 'row' AND the device arrays actually are row-major sorted."""
+    assert m.order == "row", f"order tag is {m.order!r}"
+    R = np.asarray(m.row).reshape(m.pr * m.pc, m.cap)
+    C = np.asarray(m.col).reshape(m.pr * m.pc, m.cap)
+    Nz = np.asarray(m.nnz).reshape(-1)
+    for t in range(R.shape[0]):
+        k = int(Nz[t])
+        key = R[t, :k].astype(np.int64) * (m.nb + 1) + C[t, :k]
+        assert np.all(np.diff(key) >= 0), f"tile {t} not row-major"
+        assert np.all(R[t, k:] == SENTINEL), f"tile {t} padding not canonical"
+
+
+class TestOrderInvariant:
+    def test_assembly_and_ops_preserve_row_order(self, mesh):
+        dense, (r, c, v) = make_graph(40, 0.15, seed=3)
+        A = DistSpMat.from_global_coo((40, 40), r, c, v, (1, 1), mesh=mesh,
+                                      cap=1024)
+        assert_row_sorted(A)
+        # apply (value-only) and prune (stable compaction) keep the order
+        A2 = mat_apply_local(A, lambda t: t.apply(lambda x: x * 2), mesh=mesh)
+        assert_row_sorted(A2)
+        A3 = mat_apply_local(A, lambda t: t.prune(lambda x: x > 0.5),
+                             mesh=mesh)
+        assert_row_sorted(A3)
+        L = mat_select_lower(A, mesh=mesh)
+        assert_row_sorted(L)
+        # column restriction compacts stably
+        assert_row_sorted(_restrict_cols(A, 0, 16))
+        # transpose flips the sort direction
+        assert mat_transpose(A, mesh=mesh).order == "col"
+
+    def test_spgemm_output_row_sorted(self, mesh):
+        dense, (r, c, v) = make_graph(36, 0.2, seed=4)
+        A = DistSpMat.from_global_coo((36, 36), r, c, v, (1, 1), mesh=mesh,
+                                      cap=1024)
+        C, plan = spgemm_planned(A, A, ARITHMETIC, mesh=mesh)
+        assert_row_sorted(C)
+        np.testing.assert_allclose(C.to_dense()[:36, :36], dense @ dense,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_ewise_local_row_sorted(self, mesh):
+        from repro.core.coo import ewise_intersect, ewise_union
+        from repro.core.semiring import PLUS
+        dense, (r, c, v) = make_graph(30, 0.2, seed=5)
+        A = DistSpMat.from_global_coo((30, 30), r, c, v, (1, 1), mesh=mesh,
+                                      cap=512)
+        U = mat_ewise_local(A, A, lambda t1, t2: ewise_union(
+            t1, t2, PLUS, cap=t1.cap), mesh=mesh)
+        assert_row_sorted(U)
+        X = mat_ewise_local(A, A, lambda t1, t2: ewise_intersect(
+            t1, t2, jnp.multiply, out_cap=t1.cap), mesh=mesh)
+        assert_row_sorted(X)
+
+
+class TestPlanner:
+    def test_caps_scale_with_problem(self, mesh):
+        _, (r, c, v) = make_graph(40, 0.05, seed=0)
+        A = DistSpMat.from_global_coo((40, 40), r, c, v, (1, 1), mesh=mesh)
+        _, (r2, c2, v2) = make_graph(40, 0.5, seed=0)
+        B = DistSpMat.from_global_coo((40, 40), r2, c2, v2, (1, 1), mesh=mesh)
+        pa, pb = plan_spgemm(A, A), plan_spgemm(B, B)
+        assert pb.prod_cap > pa.prod_cap       # denser input → bigger caps
+
+    def test_retry_grows_to_correct_result(self, mesh):
+        dense, (r, c, v) = make_graph(32, 0.3, seed=1)
+        A = DistSpMat.from_global_coo((32, 32), r, c, v, (1, 1), mesh=mesh)
+        honest = plan_spgemm(A, A)
+        lowball = SpGEMMPlan(64, 64, honest.variant, honest.merge,
+                             honest.prod_ceiling, honest.out_ceiling, 0, 0)
+        C, used = spgemm_planned(A, A, ARITHMETIC, mesh=mesh, plan=lowball)
+        assert used.attempts > 1               # first attempt overflowed
+        np.testing.assert_allclose(C.to_dense()[:32, :32], dense @ dense,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_output_overflow_detected_not_truncated(self, mesh):
+        """nnz(C) > out_cap must trip ok (pre-clamp check) and retry to the
+        full result — with_cap's nnz clamp must not mask the overflow."""
+        n = 64
+        dense = np.zeros((n, n), np.float32)
+        dense[0, :] = 1.0
+        dense[:, 0] = 1.0                       # C = A@A is fully dense
+        r, c = np.nonzero(dense)
+        A = DistSpMat.from_global_coo((n, n), r.astype(np.int64),
+                                      c.astype(np.int64), dense[r, c],
+                                      (1, 1), mesh=mesh)
+        C, used = spgemm_planned(A, A, ARITHMETIC, mesh=mesh,
+                                 prod_cap=1 << 16)
+        assert used.attempts > 1                # estimator undershot, retried
+        np.testing.assert_allclose(C.to_dense()[:n, :n], dense @ dense,
+                                   rtol=1e-5)
+
+    def test_explicit_caps_override(self, mesh):
+        _, (r, c, v) = make_graph(40, 0.1, seed=2)
+        A = DistSpMat.from_global_coo((40, 40), r, c, v, (1, 1), mesh=mesh)
+        p = plan_spgemm(A, A, prod_cap=1 << 15, out_cap=1 << 12)
+        assert p.prod_cap >= 1 << 15 and p.out_cap >= 1 << 12
+
+    def test_rules_of_thumb(self, mesh):
+        _, (r, c, v) = make_graph(40, 0.1, seed=2)
+        A = DistSpMat.from_global_coo((40, 40), r, c, v, (1, 1), mesh=mesh)
+        # tiny memory budget flips both memory-saving choices
+        p = plan_spgemm(A, A, mem_budget=8)
+        assert p.variant == "rotation" and p.merge == "incremental"
+        p = plan_spgemm(A, A, mem_budget=1 << 30)
+        assert p.variant == "allgather" and p.merge == "deferred"
+        # Fig-3 density thresholds
+        assert spmspv_variant_for_density(0.001) == "sort"
+        assert spmspv_variant_for_density(0.05) == "bucket"
+        assert spmspv_variant_for_density(0.5) == "spa"
+        assert plan_spmspv(A, 40).use_spmv          # dense frontier
+        assert not plan_spmspv(A, 1).use_spmv
+        # dense-merge rule: only when the frontier is dense AND the add
+        # monoid reduces natively (psum_scatter needs 'sum')
+        assert plan_spmspv(A, 40, add_tag="sum").merge == "dense"
+        assert plan_spmspv(A, 1, add_tag="sum").merge == "sparse"
+        assert plan_spmspv(A, 40, add_tag="max").merge == "sparse"
+        # bucketed sparse merge splits out_cap across pc destinations: the
+        # ceiling must carry the ×pc headroom or skewed outputs can never
+        # satisfy the per-bucket bound
+        p40 = plan_spmspv(A, 40)
+        assert p40.out_ceiling >= A.grid[1] * min(
+            int(np.asarray(A.nnz).max()), A.mb)
+        assert spmv_variant(A) == "row"
+        assert spmv_variant(mat_transpose(A, mesh=mesh)) == "col"
+
+    def test_local_plan_exact_flops_never_overflow(self):
+        from repro.core.coo import COO
+        from repro.core.local_spgemm import spgemm_esc
+        rng = np.random.default_rng(7)
+        d = np.where(rng.random((24, 24)) < 0.3,
+                     rng.random((24, 24)).astype(np.float32) + 0.5, 0.0)
+        A = COO.from_dense(jnp.asarray(d), cap=int((d != 0).sum()) + 8)
+        p = plan_local_spgemm(A, A)
+        c, ok = spgemm_esc(A, A, ARITHMETIC, prod_cap=p.prod_cap,
+                           out_cap=p.out_cap)
+        assert bool(ok)
+        np.testing.assert_allclose(np.asarray(c.to_dense()), d @ d, rtol=1e-4)
+
+    def test_app_beyond_old_default_caps(self, mesh):
+        """Old hard-coded prod_cap=1<<16 would overflow here; the planner
+        must size (or grow) past it without any caps in the call."""
+        from repro.apps import triangle_count
+        dense, (r, c, v) = make_graph(96, 0.45, seed=6)
+        A = DistSpMat.from_global_coo((96, 96), r, c, np.ones_like(v),
+                                      (1, 1), mesh=mesh)
+        got = triangle_count(A, mesh=mesh)
+        ref = int(round(np.trace(np.linalg.matrix_power(dense, 3)) / 6))
+        assert got == ref
+
+
+class TestBatchedSpGEMM:
+    def test_restrict_cols_partitions(self, mesh):
+        _, (r, c, v) = make_graph(32, 0.2, seed=8)
+        B = DistSpMat.from_global_coo((32, 32), r, c, v, (1, 1), mesh=mesh)
+        whole = B.to_dense()
+        lo_half = _restrict_cols(B, 0, 16).to_dense()
+        hi_half = _restrict_cols(B, 16, 16).to_dense()
+        np.testing.assert_allclose(lo_half + hi_half, whole)
+        assert np.all(lo_half[:, 16:] == 0) and np.all(hi_half[:, :16] == 0)
+
+    def test_batched_concatenates_to_unbatched(self, mesh):
+        shape, r, c, v = rmat_coo(5, 4, seed=3)
+        A = DistSpMat.from_global_coo(shape, r, c, v, (1, 1), mesh=mesh)
+        plan = plan_spgemm(A, A)
+        full, ok = spgemm_2d(A, A, ARITHMETIC, mesh=mesh,
+                             prod_cap=plan.prod_cap, out_cap=plan.out_cap)
+        assert bool(jnp.all(ok))
+        for nbatch in (2, 4):
+            outs = spgemm_2d_batched(A, A, ARITHMETIC, mesh=mesh,
+                                     prod_cap=plan.prod_cap,
+                                     out_cap=plan.out_cap, nbatch=nbatch)
+            acc = np.zeros_like(full.to_dense())
+            for cb, okb in outs:
+                assert bool(jnp.all(okb))
+                acc += cb.to_dense()
+            np.testing.assert_allclose(acc, full.to_dense(), rtol=1e-5,
+                                       atol=1e-6)
