@@ -33,23 +33,37 @@ def _time(fn, *args, reps=2):
 
 
 def evolution(scale=11):
-    """Fig 5/6 analogue: SpGEMM variants on the same matrix, same devices."""
+    """Fig 5/6 analogue: SpGEMM variants on the same matrix, same devices.
+
+    The merge axis sweeps the §4.4 strategies: 'sort' is the seed
+    concat-and-sort baseline, 'deferred' the merge-engine tree,
+    'incremental' the rank-placement accumulator.
+    """
     shape, r, c, v = rmat_coo(scale, 8, seed=2)
     mesh = make_grid(4, 4)
     A = DistSpMat.from_global_coo(shape, r, c, v, (4, 4), mesh=mesh,
                                   random_permute=True)
     pc, oc = 1 << 17, 1 << 16
     rows = []
-    for variant, merge in [("allgather", "deferred"),
+    times = {}
+    for variant, merge in [("allgather", "sort"),
+                           ("allgather", "deferred"),
+                           ("rotation", "sort"),
                            ("rotation", "deferred"),
                            ("rotation", "incremental")]:
         fn = jax.jit(lambda a, b, vr=variant, mg=merge: spgemm_2d(
             a, b, ARITHMETIC, mesh=mesh, prod_cap=pc, out_cap=oc,
             variant=vr, merge=mg))
         t = _time(fn, A, A)
+        times[(variant, merge)] = t
         coll = collective_bytes(fn.lower(A, A).compile().as_text())
         rows.append((f"spgemm2d_{variant}_{merge}", t,
                      f"collbytes={coll['total']:.0f}"))
+    for variant in ("allgather", "rotation"):
+        rows.append((f"spgemm2d_{variant}_merge_engine_speedup",
+                     times[(variant, "sort")] /
+                     max(times[(variant, "deferred")], 1e-9),
+                     "sort/deferred (merge engine win)"))
     # 3D CA on (4, 2, 2)
     mesh3 = make_grid(2, 2, layers=4)
     A3 = DistSpMat3D.from_global_coo(shape, r, c, v, (4, 2, 2), "acol",

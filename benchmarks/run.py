@@ -4,6 +4,13 @@ Prints ``name,us_per_call,derived`` CSV. Distributed benchmarks run in
 subprocesses with forced host devices; everything else runs on the single
 real device. ``--full`` widens the sweeps.
 
+``--json`` additionally writes ``BENCH_spgemm.json`` (repo root): the
+spgemm benchmark rows plus every ``*_speedup*`` ratio, so future PRs can
+diff perf trajectories (quick-mode invocation: the verify flow runs
+``python -m benchmarks.run --only spgemm_local --json`` from the repo
+root — the ``-m`` form is required so the ``benchmarks`` package
+resolves).
+
   spmspv_sweep    Fig 3   SpMSpV/SpMV variant selection vs sparsity
   spgemm_local    §4.1    hash↔dense vs heap↔ESC crossover
   dist(evolution) Fig 5/6 2D SUMMA variants vs 3D CA (time + coll bytes)
@@ -16,16 +23,34 @@ real device. ``--full`` widens the sweeps.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import subprocess
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
 
 def emit(rows):
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def write_bench_json(rows, path=None):
+    """BENCH_spgemm.json trajectory artifact: µs per benchmark + ratios."""
+    path = path or os.path.join(ROOT, "BENCH_spgemm.json")
+    doc = {
+        "benchmarks": {name: {"us": round(us, 1), "derived": derived}
+                       for name, us, derived in rows},
+        "speedups": {name: round(us, 3) for name, us, _ in rows
+                     if "speedup" in name},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {os.path.relpath(path)}", file=sys.stderr)
+    return doc
 
 
 def run_dist(which: str, devices: int = 16):
@@ -78,6 +103,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benches")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_spgemm.json (spgemm rows + speedups)")
     args, _ = ap.parse_known_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -90,7 +117,10 @@ def main() -> None:
         emit(spmspv_sweep.run(quick=quick))
     if want("spgemm_local"):
         from benchmarks import spgemm_local
-        emit(spgemm_local.run(quick=quick))
+        rows = spgemm_local.run(quick=quick)
+        emit(rows)
+        if args.json:
+            write_bench_json(rows)
     if want("dist"):
         run_dist("evolution")
         run_dist("scaling")

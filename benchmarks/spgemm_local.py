@@ -6,6 +6,18 @@ Capacities and the algo pick come from the planner's exact symbolic phase
 (core/plan.py, plan_local_spgemm) instead of ad-hoc constants, and the
 sweep additionally times the order-tag fast path (row-sorted tiles skip the
 expansion sort) against the untagged fallback.
+
+Merge-engine sweep (DESIGN.md §4.4): q SUMMA-stage expansion buffers at
+planner-default capacities (safety ×4, pow2 quantization — the caps a real
+2D deferred multiply runs with), merged by
+
+  - the seed path: concatenate all q padded buffers, two-key value-carrying
+    lax.sort, segmented reduce ("legacy concat-and-sort"), vs
+  - the engine:   per-stage windowed compaction (cap-slack windows skip
+    their sort at runtime) + pairwise rank-placement merge tree.
+
+``spgemm_merge_engine_speedup`` is the headline ratio (target ≥ 1.5x);
+``BENCH_spgemm.json`` (benchmarks/run.py --json) records the trajectory.
 """
 from __future__ import annotations
 
@@ -16,9 +28,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ARITHMETIC
-from repro.core.coo import COO
-from repro.core.local_spgemm import spgemm_dense, spgemm_esc
-from repro.core.plan import plan_local_spgemm
+from repro.core.coo import COO, SENTINEL
+from repro.core import merge as merge_engine
+from repro.core.local_spgemm import _expand, spgemm_dense, spgemm_esc, \
+    spgemm_flops
+from repro.core.plan import plan_local_spgemm, _pow2
+from repro.io import rmat_coo
 
 
 def _time(fn, *args, reps=3):
@@ -28,6 +43,116 @@ def _time(fn, *args, reps=3):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _col_slab(co: COO, lo: int, hi: int, axis: str) -> COO:
+    """Restrict a tile to a column ('col') or row ('row') slab, compacted."""
+    keep = ((np.asarray(co.col) >= lo) & (np.asarray(co.col) < hi)) \
+        if axis == "col" else \
+        ((np.asarray(co.row) >= lo) & (np.asarray(co.row) < hi))
+    idx = np.argsort(~keep, kind="stable")
+    r = np.asarray(co.row)[idx].copy()
+    c = np.asarray(co.col)[idx].copy()
+    v = np.asarray(co.val)[idx].copy()
+    nnz = int(keep.sum())
+    r[nnz:] = SENTINEL
+    c[nnz:] = SENTINEL
+    v[nnz:] = 0
+    return COO(jnp.asarray(r), jnp.asarray(c), jnp.asarray(v),
+               jnp.asarray(nnz, jnp.int32), co.shape, "row")
+
+
+def _summa_stage_buffers(scale: int, deg: int, q: int, seed: int = 1,
+                         safety: float = 4.0):
+    """q SUMMA-stage product buffers for an RMAT graph squared.
+
+    Stage s multiplies the s-th column slab of A by the s-th row slab —
+    exactly the local work sequence of a q-stage 2D SUMMA — with prod_cap /
+    out_cap sized the way plan_spgemm sizes them (×safety, pow2).
+    """
+    shape, r, c, v = rmat_coo(scale, deg, seed=seed)
+    n = shape[0]
+    dense = np.zeros((n, n), np.float32)
+    dense[r, c] += v
+    A = COO.from_dense(jnp.asarray(dense), cap=_pow2(int((dense != 0).sum())))
+    w = n // q
+    pairs = [(_col_slab(A, s * w, (s + 1) * w, "col"),
+              _col_slab(A, s * w, (s + 1) * w, "row")) for s in range(q)]
+    max_fl = max(int(jax.device_get(spgemm_flops(x, y))) for x, y in pairs)
+    prod_cap = _pow2(max_fl * safety)
+    nnz_c = int((dense @ dense != 0).sum())
+    out_cap = _pow2(nnz_c * 1.25)
+    outs = [_expand(x, y, ARITHMETIC, prod_cap) for x, y in pairs]
+    stages = [(o[0], o[1], o[2],
+               jnp.minimum(o[3], prod_cap).astype(jnp.int32)) for o in outs]
+    return stages, (n, n), prod_cap, out_cap
+
+
+def merge_sweep(quick=True):
+    """Merge-engine vs seed concat-and-sort on the deferred 2D path."""
+    rows = []
+    scale, q = 9, 8                   # default sizes (planner-default caps)
+    reps = 2 if quick else 3
+    stages, shape, prod_cap, out_cap = _summa_stage_buffers(scale, 8, q)
+    stage_cap = min(prod_cap, out_cap)
+    add = ARITHMETIC.add
+
+    def legacy(st):
+        r = jnp.concatenate([s[0] for s in st])
+        c = jnp.concatenate([s[1] for s in st])
+        v = jnp.concatenate([s[2] for s in st])
+        total = sum(s[3] for s in st)
+        prods = COO(r, c, v, jnp.minimum(total, r.shape[0]).astype(jnp.int32),
+                    shape, "none")
+        return merge_engine.dedup_legacy(prods, add, "row") \
+            .with_cap(out_cap, 0)
+
+    def engine(st):
+        c, ok = merge_engine.merge_stage_products(st, shape, add, stage_cap,
+                                                  out_cap)
+        return c
+
+    jl, je = jax.jit(legacy), jax.jit(engine)
+    ref, got = jl(stages), je(stages)
+    np.testing.assert_allclose(np.asarray(ref.to_dense()),
+                               np.asarray(got.to_dense()),
+                               rtol=1e-4, atol=1e-4)
+    t_legacy = _time(jl, stages, reps=reps)
+    t_engine = _time(je, stages, reps=reps)
+    meta = f"q={q}_prodcap={prod_cap}_outcap={out_cap}"
+    rows.append((f"spgemm_merge_legacy_sort_s{scale}", t_legacy, meta))
+    rows.append((f"spgemm_merge_engine_deferred_s{scale}", t_engine, meta))
+    rows.append((f"spgemm_merge_engine_speedup_s{scale}",
+                 t_legacy / max(t_engine, 1e-9), "target>=1.5"))
+
+    # packed-key dedup vs the seed two-key sort (one concat buffer)
+    r = jnp.concatenate([s[0] for s in stages])
+    c = jnp.concatenate([s[1] for s in stages])
+    v = jnp.concatenate([s[2] for s in stages])
+    total = sum(s[3] for s in stages)
+    prods = COO(r, c, v, jnp.minimum(total, r.shape[0]).astype(jnp.int32),
+                shape, "none")
+    jp = jax.jit(lambda p: merge_engine.dedup(p, add, "row"))
+    jg = jax.jit(lambda p: merge_engine.dedup_legacy(p, add, "row"))
+    t_packed = _time(jp, prods, reps=reps)
+    t_twokey = _time(jg, prods, reps=reps)
+    rows.append(("dedup_packed_key", t_packed,
+                 f"concat_cap={int(r.shape[0])}"))
+    rows.append(("dedup_two_key_legacy", t_twokey, "seed implementation"))
+    rows.append(("dedup_packed_speedup", t_twokey / max(t_packed, 1e-9),
+                 "packed single-key vs two-key sort"))
+
+    # sorted fast path: dedup of an already row-sorted tile skips the sort
+    sorted_tile = jp(prods)                      # row-sorted, tagged
+    js = jax.jit(lambda t: t.dedup_sorted(add))
+    ju = jax.jit(lambda t: merge_engine.dedup(
+        COO(t.row, t.col, t.val, t.nnz, t.shape, "none"), add, "row"))
+    t_sorted = _time(js, sorted_tile, reps=reps)
+    t_unsorted = _time(ju, sorted_tile, reps=reps)
+    rows.append(("dedup_sorted_fast_path", t_sorted, "order-tag, no sort"))
+    rows.append(("dedup_sorted_speedup", t_unsorted / max(t_sorted, 1e-9),
+                 "vs untagged packed dedup"))
+    return rows
 
 
 def run(quick=True):
@@ -61,4 +186,5 @@ def run(quick=True):
                      t_dns if plan.algo == "dense" else t_esc, plan.algo))
         rows.append((f"spgemm_winner_d{d}", min(t_esc, t_dns),
                      "esc" if t_esc < t_dns else "dense"))
+    rows.extend(merge_sweep(quick=quick))
     return rows

@@ -3,6 +3,8 @@
 Layering:
   semiring      generalized (add, mul) algebra + segment reductions
   coo           capacity-padded local sparse tiles (SpMat analogue)
+  merge         sort-free merge engine: packed-key dedup, rank-placement
+                merging, kv stage pipeline (§4.4)
   local_spgemm  ESC / dense-accumulator / hybrid local multiply (§4.1)
   spmv_local    SpMV + SpMSpV variant families (§4.2–4.3)
   dist          SpParMat / FullyDist[Sp]Vec containers (§2.1–2.2)
@@ -13,8 +15,10 @@ Layering:
   plan          capacity planner + variant rules of thumb (§5, §7)
   compat        jax version shims (single home for post-0.4.x APIs)
 """
-from . import compat, semiring
+from . import compat, merge, semiring
 from .coo import COO, SENTINEL, column_range, ewise_intersect, ewise_union
+from .merge import (dedup_sorted, merge_capped, merge_sorted, merge_tree,
+                    pack_keys)
 from .dist import (DistSpMat, DistSpMat3D, DistSpVec, DistVec, make_grid,
                    shard_put, specs_of)
 from .local_spgemm import (compression_ratio, spgemm_auto, spgemm_dense,

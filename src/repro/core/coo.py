@@ -123,47 +123,28 @@ class COO:
     def sort(self, order: str = "row") -> "COO":
         """Lexicographic sort by (row, col) ['row'] or (col, row) ['col'].
 
-        Uses jax.lax.sort with two integer keys — no index arithmetic, so no
-        int32 overflow for any tile size (the paper's 32/64-bit split).
+        Packed single-key argsort + one gather (merge engine, DESIGN.md
+        §4.4); tiles beyond the packable key space fall back to the two-key
+        lax.sort (no int32 overflow for any tile size — the paper's
+        32/64-bit split).
         """
-        if self.order == order:
-            return self
-        k1, k2 = (self.row, self.col) if order == "row" else (self.col, self.row)
-        vflat = self.val.reshape(self.cap, -1)
-        ops = [k1, k2] + [vflat[:, i] for i in range(vflat.shape[1])]
-        out = jax.lax.sort(ops, num_keys=2, is_stable=True)
-        val = jnp.stack(out[2:], axis=1).reshape(self.val.shape) \
-            if vflat.shape[1] else self.val
-        row, col = (out[0], out[1]) if order == "row" else (out[1], out[0])
-        return COO(row, col, val, self.nnz, self.shape, order)
+        from .merge import sort_packed
+        return sort_packed(self, order)
 
     def dedup(self, add: Monoid, order: str = "row") -> "COO":
-        """Merge duplicate (row, col) entries with the add monoid."""
-        s = self.sort(order)
-        k1, k2 = (s.row, s.col) if order == "row" else (s.col, s.row)
-        prev1 = jnp.concatenate([jnp.full((1,), -1, jnp.int32), k1[:-1]])
-        prev2 = jnp.concatenate([jnp.full((1,), -1, jnp.int32), k2[:-1]])
-        # an entry is live if within nnz AND not a SENTINEL placeholder; the
-        # latter makes dedup robust to inputs whose padding is interleaved
-        # (concatenated stage buffers) with a conservative nnz
-        live = s.mask() & (s.row != SENTINEL) & (s.col != SENTINEL)
-        newgrp = ((k1 != prev1) | (k2 != prev2)) & live
-        gid = jnp.cumsum(newgrp.astype(jnp.int32)) - 1          # [-1 .. ngrp)
-        ngrp = jnp.maximum(jnp.max(jnp.where(live, gid, -1)) + 1, 0)
-        gid = jnp.where(live, gid, self.cap)                    # pad -> drop
-        vals = segment_reduce(s.val, gid, self.cap, add, sorted_ids=True)
-        # representative index for each group = min position in the group
-        first_of_grp = segment_reduce(jnp.arange(self.cap, dtype=jnp.int32),
-                                      gid, self.cap,
-                                      Monoid(jnp.minimum, 2**31 - 1, "min"),
-                                      sorted_ids=True)
-        idx = jnp.clip(first_of_grp, 0, self.cap - 1)
-        valid = jnp.arange(self.cap, dtype=jnp.int32) < ngrp
-        row = jnp.where(valid, s.row[idx], SENTINEL)
-        col = jnp.where(valid, s.col[idx], SENTINEL)
-        vm = valid.reshape((-1,) + (1,) * len(self.vdims))
-        val = jnp.where(vm, vals, jnp.asarray(add.identity, vals.dtype))
-        return COO(row, col, val, ngrp.astype(jnp.int32), self.shape, order)
+        """Merge duplicate (row, col) entries with the add monoid.
+
+        Routed through the merge engine (DESIGN.md §4.4): packed-key argsort
+        for untagged tiles, sort-free run reduction when the order tag
+        already matches.
+        """
+        from .merge import dedup as _dedup
+        return _dedup(self, add, order)
+
+    def dedup_sorted(self, add: Monoid) -> "COO":
+        """Sort-free dedup for tiles already carrying an order tag (§4.3)."""
+        from .merge import dedup_sorted as _dedup_sorted
+        return _dedup_sorted(self, add)
 
     # ------------------------------------------------------------------
     # conversions / elementwise
@@ -261,18 +242,16 @@ def row_range(sorted_rows: Array, i: Array):
 
 
 def ewise_union(a: COO, b: COO, add: Monoid, cap: int | None = None) -> COO:
-    """C = A ⊕ B (entries present in either; add where both)."""
+    """C = A ⊕ B (entries present in either; add where both).
+
+    Merge-engine path (DESIGN.md §4.4): both operands row-sort (free under
+    the §4.3 invariant) and interleave via the O(n) rank-placement merge —
+    no concat-and-sort of the combined stream.
+    """
     assert a.shape == b.shape
+    from .merge import merge_sorted
     cap = cap or (a.cap + b.cap)
-    out_dtype = jnp.promote_types(a.dtype, b.dtype)
-    row = jnp.concatenate([a.row, b.row])
-    col = jnp.concatenate([a.col, b.col])
-    val = jnp.concatenate([a.val.astype(out_dtype), b.val.astype(out_dtype)])
-    nnz = a.nnz + b.nnz
-    # NB: valid entries are not contiguous after concat; dedup's sort pushes
-    # SENTINEL padding to the end, making ``nnz`` + mask() consistent again.
-    both = COO(row, col, val, nnz, a.shape, "none")
-    return both.dedup(add).with_cap(cap, add.identity)
+    return merge_sorted(a, b, add).with_cap(cap, add.identity)
 
 
 def ewise_intersect(a: COO, b: COO, mul, out_cap: int | None = None,

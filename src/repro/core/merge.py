@@ -1,0 +1,531 @@
+"""Sort-free merge engine (CombBLAS 2.0 §5 multiway merge, DESIGN.md §4.4).
+
+Every SpGEMM and element-wise path in this repo ends in a merge of
+(row, col, val) streams. The seed implementation paid a full two-key
+``lax.sort`` that dragged every value column through the comparator — even
+when the inputs were already sorted (the ``order='row'`` invariant, §4.3).
+This module replaces that with three graded primitives:
+
+  1. **Packed-key dedup** (``dedup``): encode (row, col) into ONE integer
+     key — int32 when the tile fits the 32-bit key space (the CombBLAS
+     "local indices are 32-bit" contract), int64 above it — then a single
+     key argsort + one gather of the values. The sort comparator touches
+     2 operands (key, iota) instead of 2 keys + every value column, and the
+     unique (row, col) pairs are decoded straight from the merged keys
+     (no index gathers).
+  2. **Sorted fast path** (``dedup_sorted``): inputs carrying an order tag
+     skip the argsort entirely — run-boundary detection + segmented
+     reduction only. O(n) instead of O(n log n).
+  3. **Merge path** (``merge_sorted`` / ``merge_tree``): two already-sorted
+     streams interleave in O(n) via ``searchsorted`` rank placement (the
+     paper's binary merge scheme): entry i of A lands at
+     ``i + |{b < a_i}|``, entry j of B at ``j + |{a <= b_j}|`` — a bijection
+     onto [0, |A|+|B|), computed with two binary searches and two scatters,
+     never a sort. ``merge_tree`` folds q SUMMA stage buffers pairwise.
+
+The seed two-key implementation survives as ``sort_two_key`` /
+``dedup_legacy``: the fallback when keys cannot pack (huge tile without
+x64) and the benchmark baseline for the engine's speedup claims.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .coo import SENTINEL
+from .semiring import Monoid, segment_reduce
+
+Array = jax.Array
+
+# Cap on the per-stage compaction windows kv_from_products unrolls: bounds
+# XLA program size when prod_cap >> stage_cap (high-compression multiplies)
+# at the cost of coarser slack skipping.
+MAX_WINDOWS = 8
+
+
+# --------------------------------------------------------------------------
+# key packing
+# --------------------------------------------------------------------------
+
+def key_dtype(shape) -> jnp.dtype | None:
+    """Narrowest integer dtype that can pack (row, col) for ``shape``.
+
+    int32 while (m+1)·(n+1) fits 31 bits (so the max live key stays below
+    the all-ones padding key); int64 above that when x64 is enabled; None
+    when packing is impossible (callers fall back to the two-key sort).
+    """
+    m, n = shape
+    if (m + 1) * (n + 1) < 2**31:
+        return jnp.int32
+    if jax.config.jax_enable_x64:
+        return jnp.int64
+    return None
+
+
+def pack_keys(row: Array, col: Array, shape, order: str = "row"):
+    """(row, col) -> single sortable key; SENTINEL coords -> dtype max.
+
+    'row' keys sort row-major, 'col' keys col-major. Returns None when the
+    tile exceeds the packable key space.
+    """
+    kd = key_dtype(shape)
+    if kd is None:
+        return None
+    m, n = shape
+    kmax = jnp.asarray(jnp.iinfo(kd).max, kd)
+    live = (row != SENTINEL) & (col != SENTINEL)
+    if order == "row":
+        k = row.astype(kd) * (n + 1) + col.astype(kd)
+    else:
+        k = col.astype(kd) * (m + 1) + row.astype(kd)
+    return jnp.where(live, k, kmax)
+
+
+def _unpack(keys: Array, shape, order: str):
+    """Inverse of pack_keys for live keys (padding handled by callers)."""
+    m, n = shape
+    base = (n + 1) if order == "row" else (m + 1)
+    hi = (keys // base).astype(jnp.int32)
+    lo = (keys % base).astype(jnp.int32)
+    return (hi, lo) if order == "row" else (lo, hi)
+
+
+# --------------------------------------------------------------------------
+# legacy two-key sort/dedup (seed implementation: fallback + benchmark base)
+# --------------------------------------------------------------------------
+
+def sort_two_key(c, order: str = "row"):
+    """Seed COO.sort: two-key lax.sort dragging every value column."""
+    from .coo import COO
+    if c.order == order:
+        return c
+    k1, k2 = (c.row, c.col) if order == "row" else (c.col, c.row)
+    vflat = c.val.reshape(c.cap, -1)
+    ops = [k1, k2] + [vflat[:, i] for i in range(vflat.shape[1])]
+    out = jax.lax.sort(ops, num_keys=2, is_stable=True)
+    val = jnp.stack(out[2:], axis=1).reshape(c.val.shape) \
+        if vflat.shape[1] else c.val
+    row, col = (out[0], out[1]) if order == "row" else (out[1], out[0])
+    return COO(row, col, val, c.nnz, c.shape, order)
+
+
+def dedup_legacy(c, add: Monoid, order: str = "row"):
+    """Seed COO.dedup: two-key sort + two segment reductions."""
+    from .coo import COO
+    s = sort_two_key(c, order)
+    k1, k2 = (s.row, s.col) if order == "row" else (s.col, s.row)
+    prev1 = jnp.concatenate([jnp.full((1,), -1, jnp.int32), k1[:-1]])
+    prev2 = jnp.concatenate([jnp.full((1,), -1, jnp.int32), k2[:-1]])
+    live = s.mask() & (s.row != SENTINEL) & (s.col != SENTINEL)
+    newgrp = ((k1 != prev1) | (k2 != prev2)) & live
+    gid = jnp.cumsum(newgrp.astype(jnp.int32)) - 1
+    ngrp = jnp.maximum(jnp.max(jnp.where(live, gid, -1)) + 1, 0)
+    gid = jnp.where(live, gid, c.cap)
+    vals = segment_reduce(s.val, gid, c.cap, add, sorted_ids=True)
+    first_of_grp = segment_reduce(jnp.arange(c.cap, dtype=jnp.int32),
+                                  gid, c.cap,
+                                  Monoid(jnp.minimum, 2**31 - 1, "min"),
+                                  sorted_ids=True)
+    idx = jnp.clip(first_of_grp, 0, c.cap - 1)
+    valid = jnp.arange(c.cap, dtype=jnp.int32) < ngrp
+    row = jnp.where(valid, s.row[idx], SENTINEL)
+    col = jnp.where(valid, s.col[idx], SENTINEL)
+    vm = valid.reshape((-1,) + (1,) * len(c.vdims))
+    val = jnp.where(vm, vals, jnp.asarray(add.identity, vals.dtype))
+    return COO(row, col, val, ngrp.astype(jnp.int32), c.shape, order)
+
+
+# --------------------------------------------------------------------------
+# packed-key engine
+# --------------------------------------------------------------------------
+
+def _sort_kv(keys: Array, vals: Array):
+    """Sort (key, val) by key. Scalar values ride the comparator network as
+    a payload (single-key unstable sort: ~1.9x cheaper than the legacy
+    two-key stable sort); vector values take one iota payload + one gather.
+    Unstable is sound here: dedup consumers combine equal-key runs with a
+    commutative monoid (the Monoid contract), so run-internal order is
+    unobservable.
+    """
+    if vals.ndim == 1:
+        ks, vs = jax.lax.sort([keys, vals], num_keys=1, is_stable=False)
+        return ks, vs
+    iota = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    ks, perm = jax.lax.sort([keys, iota], num_keys=1, is_stable=False)
+    return ks, vals[perm]
+
+
+def _run_bounds(keys: Array, nnz: Array):
+    """(gid, ngrp) for an ascending key stream with dtype-max padding."""
+    cap = keys.shape[0]
+    kmax = jnp.iinfo(keys.dtype).max
+    live = (jnp.arange(cap, dtype=jnp.int32) < nnz) & (keys != kmax)
+    prev = jnp.concatenate([jnp.full((1,), -1, keys.dtype), keys[:-1]])
+    newgrp = (keys != prev) & live
+    cs = jnp.cumsum(newgrp.astype(jnp.int32))
+    gid = jnp.where(live, cs - 1, cap)                       # pad -> drop
+    return gid, cs[-1]                                       # ngrp = total runs
+
+
+def _reduce_runs(keys: Array, vals: Array, nnz: Array, shape, add: Monoid,
+                 order: str):
+    """Fuse equal-key runs of an ascending (key, val) stream into a COO.
+
+    ``keys`` must be sorted with padding (dtype max) at the end; the first
+    ``nnz`` slots are the live entries. One boundary scan + one segmented
+    reduction; unique (row, col) decode straight from the keys.
+    """
+    from .coo import COO
+    cap = keys.shape[0]
+    kmax = jnp.iinfo(keys.dtype).max
+    gid, ngrp = _run_bounds(keys, nnz)
+    out_vals = segment_reduce(vals, gid, cap, add, sorted_ids=True)
+    # group g's key via scatter-min (all keys within a run are equal)
+    ukey = jnp.full((cap,), kmax, keys.dtype).at[gid].min(keys, mode="drop")
+    valid = jnp.arange(cap, dtype=jnp.int32) < ngrp
+    row, col = _unpack(jnp.where(valid, ukey, 0), shape, order)
+    row = jnp.where(valid, row, SENTINEL)
+    col = jnp.where(valid, col, SENTINEL)
+    vdims = vals.shape[1:]
+    vm = valid.reshape((-1,) + (1,) * len(vdims))
+    val = jnp.where(vm, out_vals, jnp.asarray(add.identity, out_vals.dtype))
+    return COO(row, col, val, ngrp.astype(jnp.int32), shape, order)
+
+
+def sort_packed(c, order: str = "row"):
+    """Packed-key argsort + one gather (COO.sort's engine implementation)."""
+    from .coo import COO
+    if c.order == order:
+        return c
+    keys = pack_keys(c.row, c.col, c.shape, order)
+    if keys is None:
+        return sort_two_key(c, order)
+    perm = jnp.argsort(keys)                                 # stable
+    return COO(c.row[perm], c.col[perm], c.val[perm], c.nnz, c.shape, order)
+
+
+def dedup(c, add: Monoid, order: str = "row"):
+    """Merge duplicate (row, col) entries (COO.dedup's engine implementation).
+
+    Tagged inputs skip the argsort (``dedup_sorted``); untagged inputs pay
+    one packed-key argsort + one value gather.
+    """
+    keys = pack_keys(c.row, c.col, c.shape, order)
+    if keys is None:
+        return dedup_legacy(c, add, order)
+    if c.order == order:
+        vals = c.val
+    else:
+        keys, vals = _sort_kv(keys, c.val)
+    return _reduce_runs(keys, vals, c.nnz, c.shape, add, order)
+
+
+def dedup_sorted(c, add: Monoid):
+    """Sort-free dedup for tiles carrying an order tag (§4.3 invariant).
+
+    Precondition: ``c.order`` in {'row','col'} and the device arrays honor
+    it (canonical padding at the end). Pure O(n): boundary scan + segmented
+    reduction, no sort of any kind.
+    """
+    assert c.order in ("row", "col"), \
+        "dedup_sorted needs an order tag; use dedup() for untagged tiles"
+    return dedup(c, add, c.order)
+
+
+# --------------------------------------------------------------------------
+# merge path (binary merge scheme, paper §5)
+# --------------------------------------------------------------------------
+
+def merge_sorted(a, b, add: Monoid, order: str = "row"):
+    """C = A ⊕ B for two sorted tiles of the same shape — O(n), sort-free.
+
+    Rank placement: output position of A[i] is ``i + |{kb < ka[i]}|`` and of
+    B[j] is ``j + |{ka <= kb[j]}|`` (two searchsorteds). The two position
+    sets are a bijection onto [0, capA+capB) with A's duplicates preceding
+    B's, so two scatters materialize the merged sorted stream; equal keys
+    then fuse in the same O(n) run reduction as ``dedup_sorted``.
+
+    Inputs not carrying the order tag are packed-sorted first. Returns an
+    exact-capacity (capA+capB) COO; callers clamp with ``with_cap`` after
+    checking ``nnz`` against their budget.
+    """
+    assert a.shape == b.shape, (a.shape, b.shape)
+    kd = key_dtype(a.shape)
+    if kd is None:                        # unpackable tile: legacy concat
+        from .coo import COO
+        out_dtype = jnp.promote_types(a.dtype, b.dtype)
+        both = COO(jnp.concatenate([a.row, b.row]),
+                   jnp.concatenate([a.col, b.col]),
+                   jnp.concatenate([a.val.astype(out_dtype),
+                                    b.val.astype(out_dtype)]),
+                   a.nnz + b.nnz, a.shape, "none")
+        return dedup_legacy(both, add, order)
+    a = sort_packed(a, order)
+    b = sort_packed(b, order)
+    ka = pack_keys(a.row, a.col, a.shape, order)
+    kb = pack_keys(b.row, b.col, b.shape, order)
+    pos_a = jnp.arange(a.cap, dtype=jnp.int32) + \
+        jnp.searchsorted(kb, ka, side="left").astype(jnp.int32)
+    pos_b = jnp.arange(b.cap, dtype=jnp.int32) + \
+        jnp.searchsorted(ka, kb, side="right").astype(jnp.int32)
+    total = a.cap + b.cap
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    vdims = a.val.shape[1:]
+    keys = jnp.zeros((total,), ka.dtype) \
+        .at[pos_a].set(ka).at[pos_b].set(kb)
+    vals = jnp.zeros((total,) + vdims, out_dtype) \
+        .at[pos_a].set(a.val.astype(out_dtype)) \
+        .at[pos_b].set(b.val.astype(out_dtype))
+    return _reduce_runs(keys, vals, a.nnz + b.nnz, a.shape, add, order)
+
+
+# --------------------------------------------------------------------------
+# kv-level stage combining (the SpGEMM hot path)
+#
+# COO-level primitives rebuild (row, col, val, nnz) containers at every
+# step. For SUMMA stage merging that is 3 gathers/scatters per array per
+# level; the kv representation carries only (packed keys, values, count)
+# through the whole pipeline and decodes rows/cols exactly once at the end.
+# --------------------------------------------------------------------------
+
+def _kv_dedup_window(keys, vals, nlive, add: Monoid, cap: int):
+    """Sort + run-fuse one key/value window; slice to ``cap`` slots."""
+    full_cap = keys.shape[0]
+    kmax = jnp.asarray(jnp.iinfo(keys.dtype).max, keys.dtype)
+    ks, vs = _sort_kv(keys, vals)
+    gid, ngrp = _run_bounds(ks, nlive)
+    out_v = segment_reduce(vs, gid, full_cap, add, sorted_ids=True)
+    # group g's key via scatter-min (all keys in a group are equal)
+    out_k = jnp.full((full_cap,), kmax, ks.dtype) \
+        .at[gid].min(ks, mode="drop")
+    ok = ngrp <= cap
+    if cap < full_cap:
+        out_k, out_v = out_k[:cap], out_v[:cap]
+    return out_k, out_v, jnp.minimum(ngrp, cap).astype(jnp.int32), ok
+
+
+def kv_from_products(rows, cols, vals, nprod, shape, add: Monoid,
+                     cap: int, order: str = "row"):
+    """One padded expansion buffer -> compacted sorted unique kv stream.
+
+    The buffer is processed in windows of max(cap, full_cap/MAX_WINDOWS)
+    slots. Expansion places live products CONTIGUOUSLY at the front, so
+    windows past the live prefix are pure cap slack — a ``lax.cond`` skips
+    their sort (and their merge) at runtime. The seed path sorted every
+    slot of every stage buffer; here the work tracks the live product
+    count, not the capacity guess (DESIGN.md §4.4 — the planner's ×safety
+    slack costs ~nothing). Window distinct counts are bounded by the stage
+    distinct count, so slicing every window stream to ``cap`` is lossless
+    whenever the stage fits — the pre-slice ok checks catch when it
+    doesn't. Returns (keys[cap], vals[cap], n, ok).
+    """
+    full_cap = rows.shape[0]
+    keys = pack_keys(rows, cols, shape, order)
+    assert keys is not None, "kv path requires a packable tile"
+    win = max(cap, full_cap // MAX_WINDOWS)
+    if full_cap <= win or full_cap % win != 0:
+        return _kv_dedup_window(keys, vals, nprod, add, cap)
+    nwin = full_cap // win
+    items = []
+    ok = jnp.bool_(True)
+    for t in range(nwin):
+        sl = slice(t * win, (t + 1) * win)
+        kw, vw = keys[sl], vals[sl]
+        nw = jnp.clip(nprod - t * win, 0, win)
+        # windows past the live prefix are all padding and already sorted
+        # (the skip branch's static slice keeps the cap-sized stream shape)
+        kt, vt, nt, okt = jax.lax.cond(
+            nw > 0,
+            lambda kw, vw, nw: _kv_dedup_window(kw, vw, nw, add, cap),
+            lambda kw, vw, nw: (kw[:cap], vw[:cap],
+                                jnp.zeros((), jnp.int32), jnp.bool_(True)),
+            kw, vw, nw)
+        ok = ok & okt
+        items.append((kt, vt, nt))
+    # fold the window streams pairwise; merges whose right side is empty
+    # pass the left side through untouched (the slack never merges either)
+    while len(items) > 1:
+        nxt = []
+        for i in range(0, len(items) - 1, 2):
+            ka, va, na = items[i]
+            kb, vb, nb = items[i + 1]
+            km, vm, nm, okm = jax.lax.cond(
+                nb > 0,
+                lambda ka, va, na, kb, vb, nb: kv_merge2(
+                    ka, va, na, kb, vb, nb, add, cap),
+                lambda ka, va, na, kb, vb, nb: (ka, va, na, jnp.bool_(True)),
+                ka, va, na, kb, vb, nb)
+            ok = ok & okm
+            nxt.append((km, vm, nm))
+        if len(items) % 2:
+            nxt.append(items[-1])
+        items = nxt
+    k, v, n = items[0]
+    return k, v, n, ok
+
+
+def kv_merge2(ka, va, na, kb, vb, nb, add: Monoid, cap: int):
+    """Rank-placement merge of two UNIQUE-key sorted kv streams.
+
+    Because each input is already deduplicated, a duplicate run in the
+    interleaved stream has length exactly 2 (one entry from each side, A's
+    placed first) — so duplicate fusion is one shifted compare + combine,
+    no segmented reduction. Total: 2 searchsorteds + 4 scatters + a cumsum.
+
+    Liveness is defined by the keys alone (dtype-max = padding, as
+    pack_keys/kv_from_products produce); ``na``/``nb`` document the
+    streams' counts for callers threading (k, v, n) triples but do not
+    gate the merge — a stream with real keys past its count would merge
+    them.
+    """
+    del na, nb
+    ca, cb = ka.shape[0], kb.shape[0]
+    kmax = jnp.asarray(jnp.iinfo(ka.dtype).max, ka.dtype)
+    pos_a = jnp.arange(ca, dtype=jnp.int32) + \
+        jnp.searchsorted(kb, ka, side="left").astype(jnp.int32)
+    pos_b = jnp.arange(cb, dtype=jnp.int32) + \
+        jnp.searchsorted(ka, kb, side="right").astype(jnp.int32)
+    tot = ca + cb
+    out_dtype = jnp.promote_types(va.dtype, vb.dtype)
+    ident = jnp.asarray(add.identity, out_dtype)
+    keys = jnp.full((tot,), kmax, ka.dtype) \
+        .at[pos_a].set(ka).at[pos_b].set(kb)
+    vals = jnp.full((tot,) + va.shape[1:], ident, out_dtype) \
+        .at[pos_a].set(va.astype(out_dtype)) \
+        .at[pos_b].set(vb.astype(out_dtype))
+    live = keys != kmax
+    nxt_k = jnp.concatenate([keys[1:], jnp.full((1,), kmax, keys.dtype)])
+    nxt_v = jnp.concatenate(
+        [vals[1:], jnp.full((1,) + vals.shape[1:], ident, out_dtype)])
+    dup_next = (nxt_k == keys) & live
+    if vals.ndim > 1:
+        dup_next_v = dup_next.reshape((-1,) + (1,) * (vals.ndim - 1))
+    else:
+        dup_next_v = dup_next
+    fused = jnp.where(dup_next_v, add.op(vals, nxt_v), vals)
+    prev_k = jnp.concatenate([jnp.full((1,), -1, keys.dtype), keys[:-1]])
+    dead = (keys == prev_k) & live          # the B copy of a fused pair
+    alive = live & ~dead
+    pos = jnp.cumsum(alive.astype(jnp.int32)) - 1
+    n_out = jnp.sum(alive).astype(jnp.int32)
+    tgt = jnp.where(alive, pos, tot)
+    out_k = jnp.full((tot,), kmax, keys.dtype).at[tgt].set(keys, mode="drop")
+    out_v = jnp.full((tot,) + vals.shape[1:], ident, out_dtype) \
+        .at[tgt].set(fused, mode="drop")
+    cap = min(tot, cap)
+    ok = n_out <= cap
+    if cap < tot:
+        out_k, out_v = out_k[:cap], out_v[:cap]
+    return out_k, out_v, jnp.minimum(n_out, cap), ok
+
+
+def kv_empty(shape, cap: int, val_dtype, add: Monoid, order: str = "row"):
+    """Identity kv stream (the incremental-merge accumulator seed)."""
+    kd = key_dtype(shape)
+    assert kd is not None
+    return (jnp.full((cap,), jnp.iinfo(kd).max, kd),
+            jnp.full((cap,), add.identity, val_dtype),
+            jnp.zeros((), jnp.int32))
+
+
+def kv_to_coo(keys, vals, n, shape, add: Monoid, out_cap: int,
+              order: str = "row"):
+    """Decode a kv stream back to a canonical COO (the single decode)."""
+    from .coo import COO
+    cap = keys.shape[0]
+    if cap < out_cap:
+        kmax = jnp.asarray(jnp.iinfo(keys.dtype).max, keys.dtype)
+        keys = jnp.concatenate(
+            [keys, jnp.full((out_cap - cap,), kmax, keys.dtype)])
+        vals = jnp.concatenate(
+            [vals, jnp.full((out_cap - cap,) + vals.shape[1:],
+                            add.identity, vals.dtype)])
+    elif cap > out_cap:
+        keys, vals = keys[:out_cap], vals[:out_cap]
+    valid = jnp.arange(out_cap, dtype=jnp.int32) < n
+    row, col = _unpack(jnp.where(valid, keys, 0), shape, order)
+    row = jnp.where(valid, row, SENTINEL)
+    col = jnp.where(valid, col, SENTINEL)
+    vdims = vals.shape[1:]
+    vm = valid.reshape((-1,) + (1,) * len(vdims))
+    val = jnp.where(vm, vals, jnp.asarray(add.identity, vals.dtype))
+    return COO(row, col, val, jnp.minimum(n, out_cap).astype(jnp.int32),
+               shape, order)
+
+
+def kv_tree(items, add: Monoid, out_cap: int):
+    """Pairwise fold of unique-key kv streams. Returns (k, v, n, ok)."""
+    assert len(items) >= 1
+    items = list(items)
+    ok = jnp.bool_(True)
+    while len(items) > 1:
+        nxt = []
+        for i in range(0, len(items) - 1, 2):
+            ka, va, na = items[i]
+            kb, vb, nb = items[i + 1]
+            k, v, n, o = kv_merge2(ka, va, na, kb, vb, nb, add, out_cap)
+            ok = ok & o
+            nxt.append((k, v, n))
+        if len(items) % 2:
+            nxt.append(items[-1])
+        items = nxt
+    k, v, n = items[0]
+    ok = ok & (n <= out_cap)
+    return k, v, n, ok
+
+
+def merge_stage_products(stages, shape, add: Monoid, stage_cap: int,
+                         out_cap: int, order: str = "row"):
+    """Deferred merge tree over raw expansion buffers (DESIGN.md §4.4).
+
+    ``stages``: list of (rows, cols, vals, nprod) padded product buffers.
+    Each stage is compacted (kv_from_products) to ``stage_cap`` slots, the
+    compacted streams fold pairwise, and rows/cols decode once at the end.
+    Returns (COO, ok).
+    """
+    items = []
+    ok = jnp.bool_(True)
+    for (r, c, v, n) in stages:
+        k, vv, ng, o = kv_from_products(r, c, v, n, shape, add, stage_cap,
+                                        order)
+        ok = ok & o
+        items.append((k, vv, ng))
+    k, v, n, o = kv_tree(items, add, out_cap)
+    return kv_to_coo(k, v, n, shape, add, out_cap, order), ok & o
+
+
+def merge_capped(a, b, add: Monoid, cap: int, order: str = "row"):
+    """merge_sorted clamped to ``cap``; ok is the PRE-clamp overflow check."""
+    m = merge_sorted(a, b, add, order)
+    ok = m.nnz <= cap
+    return m.with_cap(cap, add.identity), ok
+
+
+def merge_tree(tiles: Sequence, add: Monoid, out_cap: int,
+               order: str = "row"):
+    """Pairwise merge of q sorted stage buffers (the SUMMA multiway merge).
+
+    Intermediate capacities grow as min(capL+capR, out_cap): a partial
+    merge's distinct count is bounded by the final nnz(C), so clamping
+    intermediates to ``out_cap`` is lossless whenever the final result fits
+    — and the pre-clamp ``ok`` checks catch the case it doesn't (the
+    planner's retry loop then grows the caps). Returns (COO, ok).
+    """
+    assert len(tiles) >= 1
+    tiles = list(tiles)
+    ok = jnp.bool_(True)
+    while len(tiles) > 1:
+        nxt = []
+        for i in range(0, len(tiles) - 1, 2):
+            m = merge_sorted(tiles[i], tiles[i + 1], add, order)
+            tgt = min(m.cap, out_cap)
+            ok = ok & (m.nnz <= tgt)
+            nxt.append(m.with_cap(tgt, add.identity))
+        if len(tiles) % 2:
+            nxt.append(tiles[-1])
+        tiles = nxt
+    final = tiles[0]
+    ok = ok & (final.nnz <= out_cap)
+    return final.with_cap(out_cap, add.identity), ok

@@ -48,6 +48,12 @@ from .spmv import spmspv as _spmspv_2d
 # variant choices; it never bounds correctness (caps still grow on retry).
 MEM_BUDGET_ENTRIES = 1 << 22
 
+# Below this many total product slots (q·prod_cap) the legacy single
+# concat-and-sort merge beats the merge tree: per-stage compaction and the
+# pairwise rank-placement merges carry fixed overheads that a few thousand
+# entries never amortize (DESIGN.md §4.4/§4.6).
+SORT_MERGE_ENTRIES = 1 << 13
+
 
 def _pow2(x: float, lo: int = 64) -> int:
     """Round up to a power of two (compile-cache-friendly cap quantization)."""
@@ -67,7 +73,7 @@ class SpGEMMPlan:
     prod_cap: int          # per-stage expansion slots per device
     out_cap: int           # merged output entries per device
     variant: str           # 'rotation' | 'allgather'
-    merge: str             # 'deferred' | 'incremental'
+    merge: str             # 'sort' | 'deferred' | 'incremental' (§4.4)
     prod_ceiling: int      # worst-case bound — retry growth stops here
     out_ceiling: int
     est_flops: float       # estimated peak per-device per-stage products
@@ -128,14 +134,30 @@ def plan_spgemm(a: DistSpMat, b: DistSpMat | None = None, *,
         o_ceil = max(o_ceil, o_cap)
 
     # rules of thumb (DESIGN.md §4.6): allgather materializes q stage
-    # operands at once — fine on small grids, memory-hostile at scale;
-    # deferred merge buffers q·prod_cap products for one sort — flip to
-    # incremental when that exceeds the scratch budget.
+    # operands at once — fine on small grids, memory-hostile at scale.
+    # Merge strategy (§4.4), from stage count and nnz stats:
+    #   - tiny total product volume: the legacy single concat-and-sort has
+    #     no per-stage fixed costs to amortize -> 'sort';
+    #   - q·prod_cap beyond the scratch budget: 'incremental' (O(out_cap)
+    #     accumulator, one stage buffer live at a time);
+    #   - otherwise 'deferred' (per-stage compaction + merge tree) — but
+    #     only where it wins: the engine's sorts track live products, so it
+    #     needs real cap slack to skip (prod_cap ≥ 4·expected products) and
+    #     its tree work (≈ out_cap·log2 q rank-placement slots) must stay
+    #     well under the q·prod_cap sort volume it avoids.
     if variant is None:
         variant = "allgather" if q * (a.cap + b.cap) <= mem_budget \
             else "rotation"
     if merge is None:
-        merge = "deferred" if q * p_cap <= mem_budget else "incremental"
+        tree_slots = o_cap * max(math.log2(max(q, 2)), 1.0)
+        if q * p_cap <= SORT_MERGE_ENTRIES:
+            merge = "sort"
+        elif q * p_cap > mem_budget:
+            merge = "incremental"
+        elif p_cap >= 4 * stage_est and tree_slots <= q * p_cap / 4:
+            merge = "deferred"
+        else:
+            merge = "sort"
     return SpGEMMPlan(p_cap, o_cap, variant, merge, p_ceil, o_ceil,
                       stage_est, out_est)
 

@@ -113,6 +113,41 @@ def semiring(add_op, add_identity, mul_op, *, tag=None, name="user") -> Semiring
 # Segment reduction under an arbitrary monoid
 # --------------------------------------------------------------------------
 
+# Optional accelerator backend (kernels/segreduce.py registers the Pallas
+# segmented-reduce kernel here). The backend is called first for tagged
+# monoids; returning None falls through to the pure-JAX paths below.
+# Resolution is lazy: the first tagged segment_reduce asks the kernels
+# layer to auto-register (TPU / REPRO_SEGREDUCE=pallas), so plain CPU runs
+# never pay the pallas import and keep XLA's native segment ops.
+_SEGREDUCE_BACKEND = None
+_SEGREDUCE_RESOLVED = False
+
+
+def register_segment_reduce_backend(fn) -> None:
+    """Install ``fn(values, seg_ids, num_segments, tag, identity) ->
+    Array | None`` as the tagged-monoid segment_reduce backend (None
+    uninstalls; also pins resolution so lazy auto-register won't rerun)."""
+    global _SEGREDUCE_BACKEND, _SEGREDUCE_RESOLVED
+    _SEGREDUCE_BACKEND = fn
+    _SEGREDUCE_RESOLVED = True
+
+
+def _resolve_segreduce_backend() -> None:
+    global _SEGREDUCE_RESOLVED
+    if _SEGREDUCE_RESOLVED:
+        return
+    _SEGREDUCE_RESOLVED = True
+    import os
+    if os.environ.get("REPRO_SEGREDUCE", "").lower() not in ("1", "pallas") \
+            and jax.default_backend() != "tpu":
+        return                  # CPU/GPU: skip even the pallas import
+    try:
+        from ..kernels import segreduce
+        segreduce.register()
+    except ImportError:  # pragma: no cover - pallas unavailable
+        pass
+
+
 def _segmented_scan_reduce(values: Array, seg_ids: Array, num_segments: int,
                            monoid: Monoid) -> Array:
     """Generic path: values sorted by ``seg_ids``. O(n log n) associative scan.
@@ -148,9 +183,19 @@ def segment_reduce(values: Array, seg_ids: Array, num_segments: int,
                    monoid: Monoid, *, sorted_ids: bool = False) -> Array:
     """Reduce ``values`` by ``seg_ids`` under ``monoid``.
 
-    ids >= num_segments (padding) are dropped. Fast paths use XLA's native
-    segment ops; the generic path requires (and if needed performs) a sort.
+    ids >= num_segments (padding) are dropped. A registered accelerator
+    backend (the Pallas segreduce kernel) takes tagged scalar streams
+    first; remaining fast paths use XLA's native segment ops; the generic
+    path requires (and if needed performs) a sort.
     """
+    if monoid.tag in _FAST_TAGS:
+        if not _SEGREDUCE_RESOLVED:
+            _resolve_segreduce_backend()
+        if _SEGREDUCE_BACKEND is not None:
+            out = _SEGREDUCE_BACKEND(values, seg_ids, num_segments,
+                                     monoid.tag, monoid.identity)
+            if out is not None:
+                return out
     if monoid.tag == "sum":
         return jax.ops.segment_sum(values, seg_ids, num_segments,
                                    indices_are_sorted=sorted_ids)
@@ -201,16 +246,28 @@ def dense_semiring_matmul(a: Array, b: Array, sr: Semiring,
     a_p = jnp.pad(a, ((0, 0), (0, kp - k)), constant_values=0)
     b_p = jnp.pad(b, ((0, kp - k), (0, 0)), constant_values=0)
     # padding contributes mul(0_a, 0_b); to keep identity semantics we mask it
+    kc_pow2 = 1
+    while kc_pow2 < k_chunk:
+        kc_pow2 *= 2
+
     def body(carry, idx):
         a_c = jax.lax.dynamic_slice_in_dim(a_p, idx * k_chunk, k_chunk, 1)
         b_c = jax.lax.dynamic_slice_in_dim(b_p, idx * k_chunk, k_chunk, 0)
         prod = sr.mul(a_c[:, :, None], b_c[None, :, :])  # (m, kc, n)
         kk = idx * k_chunk + jnp.arange(k_chunk)
         prod = jnp.where((kk < k)[None, :, None], prod, ident)
-        red = prod[:, 0, :]
-        for t in range(1, k_chunk):
-            red = sr.add.op(red, prod[:, t, :])
-        return sr.add.op(carry, red), None
+        # log-depth pairwise tree over the chunk axis: emits O(log k_chunk)
+        # ops instead of the k_chunk-long sequential chain (a 512-op
+        # compile-time blowup for non-arithmetic semirings)
+        red = prod
+        if kc_pow2 != k_chunk:
+            red = jnp.concatenate(
+                [red, jnp.full((m, kc_pow2 - k_chunk, n), ident, out_dtype)],
+                axis=1)
+        while red.shape[1] > 1:
+            half = red.shape[1] // 2
+            red = sr.add.op(red[:, :half, :], red[:, half:, :])
+        return sr.add.op(carry, red[:, 0, :]), None
 
     init = jnp.full((m, n), ident, out_dtype)
     out, _ = jax.lax.scan(body, init, jnp.arange(nchunk))

@@ -19,10 +19,20 @@ paper's √c factor on the smaller communicator), then one inter-layer
 all-to-all scatters partial C column sub-blocks and a local semiring merge
 forms C distributed like A.
 
-Merging (paper §5 "binary merge scheme"): merge='deferred' concatenates all
-stage products and sorts once; merge='incremental' dedups per stage into a
-bounded accumulator (less memory, more sorts) — the same tradeoff the paper
-spreads across SUMMA stages.
+Merging (paper §5 "binary merge scheme", DESIGN.md §4.4): every stage
+product buffer is compacted (per-stage packed-key dedup to
+min(prod_cap, out_cap) slots) and then combined through the merge engine:
+
+  merge='deferred'    pairwise merge tree over the q compacted stage
+                      buffers — O(n) rank-placement merges, never a sort of
+                      the q·prod_cap concatenation (and never of its
+                      padding slack).
+  merge='incremental' O(n) merge_sorted of each compacted stage into the
+                      row-sorted accumulator (less memory, more steps).
+  merge='sort'        the seed behavior — concatenate all q padded stage
+                      buffers and dedup once. Kept for tiny problems (the
+                      planner picks it when q·prod_cap is small) and as the
+                      benchmark baseline.
 """
 from __future__ import annotations
 
@@ -37,6 +47,8 @@ from .compat import pvary, shard_map
 from .coo import COO, SENTINEL
 from .dist import DistSpMat, DistSpMat3D, specs_of
 from .local_spgemm import _expand
+from .merge import (key_dtype, kv_empty, kv_from_products, kv_merge2,
+                    kv_to_coo, kv_tree, merge_stage_products, pack_keys)
 from .semiring import ARITHMETIC, Semiring
 
 Array = jax.Array
@@ -79,9 +91,18 @@ def _merge_products(rows, cols, vals, nvalid, shape, sr, out_cap, order="row"):
 
 def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
                      variant, merge):
-    """Body run per device under shard_map for the 2D algorithm."""
+    """Body run per device under shard_map for the 2D algorithm.
+
+    The engine paths ('deferred'/'incremental') run at the kv level:
+    per-stage compaction to stage_cap = min(prod_cap, out_cap) — sound
+    because a stage's distinct count is bounded by the final nnz(C), and
+    checked pre-clamp by the ok flags — then rank-placement merging of the
+    compacted streams, decoding rows/cols exactly once.
+    """
     shape = (a_tile.shape[0], b_tile.shape[1])
-    stage_cap = prod_cap
+    stage_cap = min(prod_cap, out_cap)
+    if key_dtype(shape) is None:
+        merge = "sort"        # unpackable tile: the engine needs x64 keys
 
     if variant == "allgather":
         # gather my process row of A and process column of B (the broadcast
@@ -94,19 +115,25 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
                      a_tile.shape, a_tile.order)
             bt = COO(bc.row[s], bc.col[s], bc.val[s], bc.nnz[s],
                      b_tile.shape, b_tile.order)
-            return _expand(at, bt, sr, stage_cap)
+            return _expand(at, bt, sr, prod_cap)
 
         outs = [stage(s) for s in range(q)]
-        rows = jnp.concatenate([o[0] for o in outs])
-        cols = jnp.concatenate([o[1] for o in outs])
-        vals = jnp.concatenate([o[2] for o in outs])
-        total = sum(o[3] for o in outs)
         ok = jnp.all(jnp.stack([o[4] for o in outs]))
-        # compact: products are per-stage padded; dedup handles scattering
-        c, ok2 = _merge_products(rows, cols, vals, total, shape, sr, out_cap)
-        # nvalid above counts only real entries; dedup sorts padding to the
-        # end, but nnz must count actual valid products:
-        return c, ok & ok2
+        if merge == "sort":
+            # seed path: concatenate q full padded buffers, sort once
+            rows = jnp.concatenate([o[0] for o in outs])
+            cols = jnp.concatenate([o[1] for o in outs])
+            vals = jnp.concatenate([o[2] for o in outs])
+            total = sum(o[3] for o in outs)
+            c, ok2 = _merge_products(rows, cols, vals, total, shape, sr,
+                                     out_cap)
+            return c, ok & ok2
+        # merge engine: compact each stage, then fold the q sorted streams
+        c, okm = merge_stage_products(
+            [(r, c_, v, jnp.minimum(n, prod_cap)) for (r, c_, v, n, _)
+             in outs],
+            shape, sr.add, stage_cap, out_cap)
+        return c, ok & okm
 
     # rotation (Cannon)
     axes = ("row", "col")
@@ -114,47 +141,67 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
     b_skew = _tile_permute(b_tile, axes, _cannon_perms(q, skew_a=False))
 
     if merge == "incremental":
-        acc = COO.empty(shape, out_cap, dtype=vals_dtype(sr, a_tile, b_tile),
-                        fill=sr.add.identity)
+        kacc, vacc, nacc = kv_empty(shape, out_cap,
+                                    vals_dtype(sr, a_tile, b_tile), sr.add)
         # constants entering a shard_map scan carry must be marked varying
         # (newer jax; identity on 0.4.x — see compat.pvary)
-        acc = jax.tree.map(lambda x: pvary(x, ("row", "col")), acc)
+        kacc, vacc, nacc = (pvary(kacc, ("row", "col")),
+                            pvary(vacc, ("row", "col")),
+                            pvary(nacc, ("row", "col")))
 
         def body(carry, _):
-            at, bt, acc, ok = carry
-            r, c, v, n, okx = _expand(at, bt, sr, stage_cap)
-            both_r = jnp.concatenate([acc.row, r])
-            both_c = jnp.concatenate([acc.col, c])
-            both_v = jnp.concatenate([acc.val, v])
-            d = COO(both_r, both_c, both_v,
-                    acc.nnz + jnp.minimum(n, stage_cap),
-                    shape, "none").dedup(sr.add)
-            ok = ok & okx & (d.nnz <= out_cap)   # pre-clamp nnz (see above)
-            merged = d.with_cap(out_cap, sr.add.identity)
+            at, bt, kacc, vacc, nacc, ok = carry
+            r, c, v, n, okx = _expand(at, bt, sr, prod_cap)
+            # compact the stage, then O(n) rank-placement merge into the
+            # sorted kv accumulator — the accumulator is never re-sorted
+            ks, vs, ns, okc = kv_from_products(
+                r, c, v, jnp.minimum(n, prod_cap), shape, sr.add, stage_cap)
+            kacc, vacc, nacc, okm = kv_merge2(kacc, vacc, nacc, ks, vs, ns,
+                                              sr.add, out_cap)
+            ok = ok & okx & okc & okm
             at = _tile_permute(at, "col", _shift_perm(q, q, left=True))
             bt = _tile_permute(bt, "row", _shift_perm(q, q, left=True))
-            return (at, bt, merged, ok), None
+            return (at, bt, kacc, vacc, nacc, ok), None
 
         ok0 = pvary(jnp.bool_(True), ("row", "col"))
-        (at, bt, acc, ok), _ = jax.lax.scan(
-            body, (a_skew, b_skew, acc, ok0), None, length=q)
-        return acc, ok
+        (at, bt, kacc, vacc, nacc, ok), _ = jax.lax.scan(
+            body, (a_skew, b_skew, kacc, vacc, nacc, ok0), None, length=q)
+        return kv_to_coo(kacc, vacc, nacc, shape, sr.add, out_cap), ok
 
+    if merge == "sort":
+        # seed path: collect q padded product buffers, concat, sort once
+        def body(carry, _):
+            at, bt = carry
+            r, c, v, n, okx = _expand(at, bt, sr, prod_cap)
+            at = _tile_permute(at, "col", _shift_perm(q, q, left=True))
+            bt = _tile_permute(bt, "row", _shift_perm(q, q, left=True))
+            return (at, bt), (r, c, v, jnp.minimum(n, prod_cap), okx)
+
+        (_, _), (rs, cs, vs, ns, oks) = jax.lax.scan(
+            body, (a_skew, b_skew), None, length=q)
+        rows = rs.reshape(-1)
+        cols = cs.reshape(-1)
+        vals = vs.reshape((-1,) + vs.shape[2:])
+        c, ok2 = _merge_products(rows, cols, vals, rows.shape[0], shape, sr,
+                                 out_cap)
+        return c, jnp.all(oks) & ok2
+
+    # deferred (merge tree): compact each stage inside the scan, then fold
+    # the q sorted kv streams pairwise — no concat-and-sort
     def body(carry, _):
         at, bt = carry
-        r, c, v, n, okx = _expand(at, bt, sr, stage_cap)
+        r, c, v, n, okx = _expand(at, bt, sr, prod_cap)
+        ks, vs, ns, okc = kv_from_products(
+            r, c, v, jnp.minimum(n, prod_cap), shape, sr.add, stage_cap)
         at = _tile_permute(at, "col", _shift_perm(q, q, left=True))
         bt = _tile_permute(bt, "row", _shift_perm(q, q, left=True))
-        return (at, bt), (r, c, v, jnp.minimum(n, stage_cap), okx)
+        return (at, bt), (ks, vs, ns, okx & okc)
 
-    (_, _), (rs, cs, vs, ns, oks) = jax.lax.scan(
+    (_, _), (ks, vs, ns, oks) = jax.lax.scan(
         body, (a_skew, b_skew), None, length=q)
-    rows = rs.reshape(-1)
-    cols = cs.reshape(-1)
-    vals = vs.reshape((-1,) + vs.shape[2:])
-    c, ok2 = _merge_products(rows, cols, vals, rows.shape[0], shape, sr,
-                             out_cap)
-    return c, jnp.all(oks) & ok2
+    items = [(ks[s], vs[s], ns[s]) for s in range(q)]
+    k, v, nn, okm = kv_tree(items, sr.add, out_cap)
+    return kv_to_coo(k, v, nn, shape, sr.add, out_cap), jnp.all(oks) & okm
 
 
 def vals_dtype(sr, a_tile, b_tile):
@@ -218,7 +265,7 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
                      (tr_b, tc_b), b3.order)
         # per-layer 2D multiply ('row'/'col' collectives are layer-local)
         c_part, ok = _local_spgemm_2d(a_tile, b_tile, sr, q,
-                                      prod_cap, prod_cap, variant, "deferred")
+                                      prod_cap, prod_cap, variant, merge)
         # ---- inter-layer all-to-all (Fig 2, right) --------------------
         # destination layer of an entry = its column sub-block
         dest = jnp.where(c_part.mask(), c_part.col // kbl, L)
@@ -255,11 +302,26 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
         # localize columns to my sub-block and merge
         valid = buf_r != SENTINEL
         lc = jnp.where(valid, buf_c - my_layer * kbl, SENTINEL)
-        d = COO(jnp.where(valid, buf_r, SENTINEL), lc, buf_v,
-                jnp.sum(valid).astype(jnp.int32), (tr_a, kbl),
-                "none").dedup(sr.add)
-        ok = ok & (d.nnz <= out_cap)             # pre-clamp nnz
-        merged = d.with_cap(out_cap, sr.add.identity)
+        lr = jnp.where(valid, buf_r, SENTINEL)
+        if merge == "sort" or key_dtype((tr_a, kbl)) is None:
+            # seed path: one dedup over the whole exchanged buffer
+            d = COO(lr, lc, buf_v, jnp.sum(valid).astype(jnp.int32),
+                    (tr_a, kbl), "none").dedup(sr.add)
+            ok = ok & (d.nnz <= out_cap)         # pre-clamp nnz
+            merged = d.with_cap(out_cap, sr.add.identity)
+        else:
+            # merge engine (§4.4): each received piece is a stable-compacted
+            # slice of a row-sorted dedup output, so the L chunks are
+            # sorted unique-key streams — fold them pairwise, never re-sort
+            items = []
+            for t in range(L):
+                sl = slice(t * cap_l, (t + 1) * cap_l)
+                items.append((pack_keys(lr[sl], lc[sl], (tr_a, kbl), "row"),
+                              buf_v[sl],
+                              jnp.sum(valid[sl]).astype(jnp.int32)))
+            k, v, nn, okm = kv_tree(items, sr.add, out_cap)
+            merged = kv_to_coo(k, v, nn, (tr_a, kbl), sr.add, out_cap)
+            ok = ok & okm
         return (merged.row[None, None, None], merged.col[None, None, None],
                 merged.val[None, None, None], merged.nnz[None, None, None],
                 ok[None, None, None])

@@ -7,6 +7,10 @@ ref.py; on-TPU they are swapped in via ops.py):
                    the paper's "hash-table" local SpGEMM accumulator
                    (DESIGN.md §4.2): MXU path for (+,×), VPU path for
                    min-plus / max-min / or-and
+  segreduce        segmented semiring reduce (DESIGN.md §4.4) — the merge
+                   engine's reduction stage; VMEM-resident output tiles as
+                   running accumulators, registered behind
+                   core.semiring.segment_reduce for tagged monoids
   bsr_spmm         block-sparse (ELL-blocked) × dense SpMM — the paper's
                    SpMM offload (§5) and the MoE grouped-matmul engine
   flash_attention  causal online-softmax attention (prefill hot-spot)

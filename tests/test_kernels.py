@@ -8,9 +8,10 @@ try:
 except ImportError:          # degrade: property tests importorskip at run
     from _hypothesis_stub import given, settings, st
 
-from repro.kernels import ref
+from repro.kernels import ref, segreduce
 from repro.kernels.bsr_spmm import bsr_spmm, to_blocked_ell
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.segreduce import segment_reduce_pallas
 from repro.kernels.semiring_matmul import semiring_matmul
 from repro.kernels.ssd_chunk import ssd_chunk
 
@@ -176,6 +177,90 @@ class TestSSDChunk:
                                    np.asarray(y_k), rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(np.asarray(final),
                                    np.asarray(st_k), rtol=1e-4, atol=1e-4)
+
+
+class TestSegReduce:
+    """Pallas segmented semiring reduce (DESIGN.md §4.4) vs XLA oracle."""
+
+    def _oracle(self, v, ids, s, tag):
+        import jax.ops as jo
+        if tag == "sum":
+            return jo.segment_sum(v, ids, s)
+        touched = jo.segment_sum(jnp.ones_like(ids), ids, s) > 0
+        if tag == "min":
+            return jnp.where(touched, jo.segment_min(v, ids, s), jnp.inf)
+        return jnp.where(touched, jo.segment_max(v, ids, s), -jnp.inf)
+
+    @pytest.mark.parametrize("tag", ["sum", "min", "max"])
+    @pytest.mark.parametrize("n,s", [(1000, 300), (64, 8), (512, 512),
+                                     (300, 1)])
+    def test_vs_xla(self, tag, n, s):
+        rng = np.random.default_rng(0)
+        ids = jnp.asarray(np.sort(rng.integers(0, s, n)).astype(np.int32))
+        v = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        got = segment_reduce_pallas(v, ids, s, tag, interpret=True)
+        want = self._oracle(v, ids, s, tag)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_out_of_range_ids_dropped(self):
+        ids = jnp.asarray([0, 1, 5, 7, 9], jnp.int32)
+        v = jnp.ones(5, jnp.float32)
+        got = segment_reduce_pallas(v, ids, 6, "sum", interpret=True)
+        np.testing.assert_allclose(np.asarray(got), [1, 1, 0, 0, 0, 1])
+
+    def test_untouched_segments_hold_identity(self):
+        ids = jnp.asarray([2, 2], jnp.int32)
+        v = jnp.asarray([4.0, 7.0], jnp.float32)
+        got = segment_reduce_pallas(v, ids, 4, "min", interpret=True)
+        np.testing.assert_allclose(np.asarray(got),
+                                   [np.inf, np.inf, 4.0, np.inf])
+
+    def test_int_dtype(self):
+        got = segment_reduce_pallas(jnp.asarray([3, 4, 5], jnp.int32),
+                                    jnp.asarray([0, 0, 2], jnp.int32),
+                                    3, "min", interpret=True)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      [3, 2**31 - 1, 5])
+
+    def test_registered_backend_serves_segment_reduce(self):
+        from repro.core import semiring
+        rng = np.random.default_rng(1)
+        ids = jnp.asarray(np.sort(rng.integers(0, 40, 200)).astype(np.int32))
+        v = jnp.asarray(rng.standard_normal(200).astype(np.float32))
+        want = semiring.segment_reduce(v, ids, 40, semiring.PLUS,
+                                       sorted_ids=True)
+        segreduce.register(interpret=True)
+        try:
+            got = semiring.segment_reduce(v, ids, 40, semiring.PLUS,
+                                          sorted_ids=True)
+            # vector-valued entries must fall through to the pure-JAX path
+            v2 = jnp.stack([v, v], axis=1)
+            got2 = semiring.segment_reduce(v2, ids, 40, semiring.PLUS,
+                                           sorted_ids=True)
+        finally:
+            segreduce.unregister()
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        assert got2.shape == (40, 2)
+
+    def test_dedup_through_pallas_backend(self):
+        """COO.dedup with the kernel registered == without (end-to-end)."""
+        from repro.core.coo import COO
+        from repro.core.semiring import PLUS
+        rng = np.random.default_rng(2)
+        a = COO.from_entries((16, 16), rng.integers(0, 16, 40),
+                             rng.integers(0, 16, 40),
+                             rng.random(40).astype(np.float32), cap=64)
+        want = a.dedup(PLUS)
+        segreduce.register(interpret=True)
+        try:
+            got = a.dedup(PLUS)
+        finally:
+            segreduce.unregister()
+        assert int(got.nnz) == int(want.nnz)
+        np.testing.assert_allclose(np.asarray(got.to_dense()),
+                                   np.asarray(want.to_dense()), rtol=1e-5)
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,0 +1,289 @@
+"""Merge-engine equivalence tests (DESIGN.md §4.4).
+
+Every engine primitive — packed-key dedup, sort-free ``dedup_sorted``,
+rank-placement ``merge_sorted``/``merge_tree``, and the kv-level stage
+pipeline — must agree with the seed implementation (``dedup_legacy``, the
+two-key value-carrying sort) across tagged and untagged monoids, padded
+and overflowing inputs. Property tests draw via hypothesis when installed
+and degrade to the deterministic seeds otherwise (tests/_hypothesis_stub).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    import sys, os
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import merge as M
+from repro.core.coo import COO, SENTINEL, ewise_union
+from repro.core.semiring import (ARITHMETIC, MAX, MAX_MIN, MIN, MIN_PLUS,
+                                 Monoid, PLUS, Semiring, segment_reduce)
+
+# user-defined untagged (but associative + commutative) monoid:
+# a ⊕ b = a + b + a·b  (identity 0) — exercises the generic scan path
+USER_ADD = Monoid(lambda a, b: a + b + a * b, 0.0, None, "user_probab")
+USER_SR = Semiring(USER_ADD, jnp.multiply, "user")
+
+MONOIDS = {
+    "plus": (PLUS, 0.0),
+    "min": (MIN, np.inf),
+    "max": (MAX, -np.inf),
+    "user": (USER_ADD, 0.0),
+}
+
+
+def rand_coo(n=24, cap=96, k=60, seed=0, fill=0.0, vdims=()):
+    """Random tile with duplicate coordinates and cap padding."""
+    rng = np.random.default_rng(seed)
+    r = rng.integers(0, n, k)
+    c = rng.integers(0, n, k)
+    v = rng.random((k,) + vdims).astype(np.float32) + 0.25
+    return COO.from_entries((n, n), r, c, v, cap=cap, fill=fill)
+
+
+def dense_of(c: COO):
+    return np.asarray(c.to_dense())
+
+
+class TestPackedDedup:
+    @pytest.mark.parametrize("name", sorted(MONOIDS))
+    def test_matches_legacy(self, name):
+        add, fill = MONOIDS[name]
+        for seed in range(4):
+            a = rand_coo(seed=seed, fill=fill)
+            got = M.dedup(a, add)
+            want = M.dedup_legacy(a, add)
+            assert int(got.nnz) == int(want.nnz)
+            np.testing.assert_allclose(dense_of(got), dense_of(want),
+                                       rtol=1e-5, atol=1e-6)
+            assert got.order == "row"
+
+    def test_col_order(self):
+        a = rand_coo(seed=3)
+        got = M.dedup(a, PLUS, order="col")
+        want = M.dedup_legacy(a, PLUS, order="col")
+        np.testing.assert_allclose(dense_of(got), dense_of(want), rtol=1e-5)
+        key = np.asarray(got.col).astype(np.int64) * 25 + np.asarray(got.row)
+        k = int(got.nnz)
+        assert np.all(np.diff(key[:k]) > 0)      # strictly col-major unique
+
+    def test_vector_values(self):
+        a = rand_coo(seed=5, vdims=(3,))
+        got = M.dedup(a, PLUS)
+        want = M.dedup_legacy(a, PLUS)
+        np.testing.assert_allclose(dense_of(got), dense_of(want), rtol=1e-5)
+
+    def test_dedup_sorted_skips_sort_same_result(self):
+        a = rand_coo(seed=7)
+        s = M.dedup(a, PLUS)                     # row-sorted unique, tagged
+        again = s.dedup_sorted(PLUS)
+        assert int(again.nnz) == int(s.nnz)
+        np.testing.assert_allclose(dense_of(again), dense_of(s), rtol=1e-6)
+
+    def test_unpackable_tile_falls_back(self):
+        # (m+1)(n+1) >= 2^31 and no x64: key_dtype is None -> legacy path
+        big = (1 << 16, 1 << 16)
+        if jax.config.jax_enable_x64:
+            pytest.skip("x64 enabled: packs into int64 instead")
+        assert M.key_dtype(big) is None
+        rng = np.random.default_rng(0)
+        a = COO.from_entries(big, rng.integers(0, 1 << 16, 32),
+                             rng.integers(0, 1 << 16, 32),
+                             rng.random(32).astype(np.float32), cap=64)
+        got = M.dedup(a, PLUS)                   # must not raise
+        want = M.dedup_legacy(a, PLUS)
+        assert int(got.nnz) == int(want.nnz)
+        np.testing.assert_array_equal(np.asarray(got.row),
+                                      np.asarray(want.row))
+
+
+class TestMergeSorted:
+    @pytest.mark.parametrize("name", sorted(MONOIDS))
+    def test_matches_concat_dedup(self, name):
+        add, fill = MONOIDS[name]
+        for seed in range(3):
+            a = M.dedup(rand_coo(seed=seed, fill=fill), add)
+            b = M.dedup(rand_coo(seed=seed + 50, fill=fill), add)
+            got = M.merge_sorted(a, b, add)
+            both = COO(jnp.concatenate([a.row, b.row]),
+                       jnp.concatenate([a.col, b.col]),
+                       jnp.concatenate([a.val, b.val]),
+                       a.nnz + b.nnz, a.shape, "none")
+            want = M.dedup_legacy(both, add)
+            assert int(got.nnz) == int(want.nnz)
+            np.testing.assert_allclose(dense_of(got), dense_of(want),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_inputs_with_internal_duplicates(self):
+        # merge_sorted must fuse within-stream duplicates too (general path)
+        a = rand_coo(seed=11).sort("row")
+        b = rand_coo(seed=12).sort("row")
+        got = M.merge_sorted(a, b, PLUS)
+        both = COO(jnp.concatenate([a.row, b.row]),
+                   jnp.concatenate([a.col, b.col]),
+                   jnp.concatenate([a.val, b.val]),
+                   a.nnz + b.nnz, a.shape, "none")
+        want = M.dedup_legacy(both, PLUS)
+        np.testing.assert_allclose(dense_of(got), dense_of(want), rtol=1e-5)
+
+    def test_merge_capped_overflow_flag(self):
+        a = M.dedup(rand_coo(seed=1), PLUS)
+        b = M.dedup(rand_coo(seed=2), PLUS)
+        full = M.merge_sorted(a, b, PLUS)
+        c, ok = M.merge_capped(a, b, PLUS, cap=int(full.nnz))
+        assert bool(ok)
+        c2, ok2 = M.merge_capped(a, b, PLUS, cap=int(full.nnz) - 1)
+        assert not bool(ok2)                     # pre-clamp check trips
+
+    def test_ewise_union_routes_through_engine(self):
+        a = M.dedup(rand_coo(seed=21), PLUS)
+        b = M.dedup(rand_coo(seed=22), PLUS)
+        u = ewise_union(a, b, PLUS)
+        np.testing.assert_allclose(dense_of(u),
+                                   dense_of(a) + dense_of(b), rtol=1e-5)
+        assert u.order == "row"
+
+
+class TestMergeTree:
+    @pytest.mark.parametrize("name", sorted(MONOIDS))
+    def test_matches_legacy_fold(self, name):
+        add, fill = MONOIDS[name]
+        tiles = [M.dedup(rand_coo(seed=s, fill=fill), add) for s in range(5)]
+        got, ok = M.merge_tree(tiles, add, out_cap=1024)
+        assert bool(ok)
+        # identity-filled dense images: the union-merge is the elementwise
+        # monoid fold (op(identity, x) == x covers one-sided entries)
+        want = np.asarray(tiles[0].to_dense(add.identity))
+        for t in tiles[1:]:
+            want = np.asarray(add.op(jnp.asarray(want),
+                                     t.to_dense(add.identity)))
+        np.testing.assert_allclose(np.asarray(got.to_dense(add.identity)),
+                                   want, rtol=1e-5, atol=1e-6)
+
+    def test_overflow_flag(self):
+        tiles = [M.dedup(rand_coo(seed=s), PLUS) for s in range(4)]
+        full, ok = M.merge_tree(tiles, PLUS, out_cap=4096)
+        assert bool(ok)
+        _, ok2 = M.merge_tree(tiles, PLUS, out_cap=int(full.nnz) - 1)
+        assert not bool(ok2)
+
+
+class TestKvStagePipeline:
+    def _stages(self, q=4, n=32, per=40, prod_cap=256, seed=0):
+        rng = np.random.default_rng(seed)
+        stages = []
+        for s in range(q):
+            k = int(rng.integers(1, per))
+            r = np.full(prod_cap, SENTINEL, np.int32)
+            c = np.full(prod_cap, SENTINEL, np.int32)
+            v = np.zeros(prod_cap, np.float32)
+            r[:k] = rng.integers(0, n, k)
+            c[:k] = rng.integers(0, n, k)
+            v[:k] = rng.random(k).astype(np.float32) + 0.5
+            stages.append((jnp.asarray(r), jnp.asarray(c), jnp.asarray(v),
+                           jnp.asarray(k, jnp.int32)))
+        return stages, (n, n)
+
+    @pytest.mark.parametrize("stage_cap,prod_cap", [(256, 256), (64, 256)])
+    def test_merge_stage_products_matches_legacy(self, stage_cap, prod_cap):
+        # stage_cap < prod_cap exercises the windowed cond-skip compaction
+        stages, shape = self._stages(prod_cap=prod_cap)
+        got, ok = M.merge_stage_products(stages, shape, PLUS, stage_cap,
+                                         out_cap=512)
+        assert bool(ok)
+        rows = jnp.concatenate([s[0] for s in stages])
+        cols = jnp.concatenate([s[1] for s in stages])
+        vals = jnp.concatenate([s[2] for s in stages])
+        total = sum(s[3] for s in stages)
+        want = M.dedup_legacy(
+            COO(rows, cols, vals, total, shape, "none"), PLUS)
+        assert int(got.nnz) == int(want.nnz)
+        np.testing.assert_allclose(dense_of(got), dense_of(want), rtol=1e-5)
+        assert got.order == "row"
+
+    def test_stage_overflow_flag(self):
+        stages, shape = self._stages()
+        full, _ = M.merge_stage_products(stages, shape, PLUS, 256, 512)
+        _, ok = M.merge_stage_products(stages, shape, PLUS, 256,
+                                       out_cap=int(full.nnz) - 1)
+        assert not bool(ok)
+
+    def test_kv_merge2_unique_streams(self):
+        a = M.dedup(rand_coo(seed=31), PLUS)
+        b = M.dedup(rand_coo(seed=32), PLUS)
+        ka = M.pack_keys(a.row, a.col, a.shape, "row")
+        kb = M.pack_keys(b.row, b.col, b.shape, "row")
+        k, v, n, ok = M.kv_merge2(ka, a.val, a.nnz, kb, b.val, b.nnz,
+                                  PLUS, a.cap + b.cap)
+        got = M.kv_to_coo(k, v, n, a.shape, PLUS, a.cap + b.cap)
+        want = M.merge_sorted(a, b, PLUS)
+        assert int(n) == int(want.nnz)
+        np.testing.assert_allclose(dense_of(got), dense_of(want), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       name=st.sampled_from(sorted(MONOIDS)),
+       cap=st.integers(40, 160))
+def test_property_dedup_equivalence(seed, name, cap):
+    add, fill = MONOIDS[name]
+    a = rand_coo(cap=cap, k=min(cap, 40 + seed % 60), seed=seed, fill=fill)
+    got = M.dedup(a, add)
+    want = M.dedup_legacy(a, add)
+    assert int(got.nnz) == int(want.nnz)
+    np.testing.assert_allclose(np.asarray(got.to_dense()),
+                               np.asarray(want.to_dense()),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       name=st.sampled_from(sorted(MONOIDS)))
+def test_property_merge_equivalence(seed, name):
+    add, fill = MONOIDS[name]
+    a = M.dedup(rand_coo(seed=seed, fill=fill), add)
+    b = M.dedup(rand_coo(seed=seed + 1, fill=fill), add)
+    got = M.merge_sorted(a, b, add)
+    both = COO(jnp.concatenate([a.row, b.row]),
+               jnp.concatenate([a.col, b.col]),
+               jnp.concatenate([a.val, b.val]),
+               a.nnz + b.nnz, a.shape, "none")
+    want = M.dedup_legacy(both, add)
+    assert int(got.nnz) == int(want.nnz)
+    np.testing.assert_allclose(np.asarray(got.to_dense()),
+                               np.asarray(want.to_dense()),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_semiring_spgemm_equivalence():
+    """spgemm_esc through the engine across semirings incl. user-defined."""
+    from repro.core.local_spgemm import spgemm_esc
+    rng = np.random.default_rng(0)
+    n = 24
+    d = np.where(rng.random((n, n)) < 0.25,
+                 rng.random((n, n)).astype(np.float32) + 0.5, 0.0)
+    A = COO.from_dense(jnp.asarray(d), cap=int((d != 0).sum()) + 8)
+    for sr, ref in [
+        (ARITHMETIC, lambda a, b: a @ b),
+        (MIN_PLUS, lambda a, b: np.min(
+            np.where((a[:, :, None] != 0) & (b[None, :, :] != 0),
+                     a[:, :, None] + b[None, :, :], np.inf), axis=1)),
+        (MAX_MIN, lambda a, b: np.max(
+            np.where((a[:, :, None] != 0) & (b[None, :, :] != 0),
+                     np.minimum(a[:, :, None], b[None, :, :]), -np.inf),
+            axis=1)),
+    ]:
+        fill = sr.add.identity
+        Af = COO(A.row, A.col, A.val, A.nnz, A.shape, A.order) \
+            .canonicalize(fill)
+        c, ok = spgemm_esc(Af, Af, sr, prod_cap=4096, out_cap=2048)
+        assert bool(ok), sr.name
+        want = ref(d, d)
+        got = np.asarray(c.to_dense(fill))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -139,10 +139,15 @@ class TestPlanner:
     def test_rules_of_thumb(self, mesh):
         _, (r, c, v) = make_graph(40, 0.1, seed=2)
         A = DistSpMat.from_global_coo((40, 40), r, c, v, (1, 1), mesh=mesh)
-        # tiny memory budget flips both memory-saving choices
-        p = plan_spgemm(A, A, mem_budget=8)
+        # tiny problems take the legacy single-sort merge regardless of
+        # budget (q·prod_cap below the merge-engine crossover, §4.4)
+        assert plan_spgemm(A, A).merge == "sort"
+        # above the crossover, a tiny memory budget flips both
+        # memory-saving choices...
+        p = plan_spgemm(A, A, mem_budget=8, prod_cap=1 << 15)
         assert p.variant == "rotation" and p.merge == "incremental"
-        p = plan_spgemm(A, A, mem_budget=1 << 30)
+        # ...and an ample one picks the deferred merge tree
+        p = plan_spgemm(A, A, mem_budget=1 << 30, prod_cap=1 << 15)
         assert p.variant == "allgather" and p.merge == "deferred"
         # Fig-3 density thresholds
         assert spmspv_variant_for_density(0.001) == "sort"
