@@ -1,8 +1,12 @@
 """repro.dist — distributed training utilities for the LM pillar.
 
-Currently provides gradient compression (``compression``); the sharding
-plan/spec module (``shardings``) referenced by launch/mesh.py and
-models/model.py is future work — importing it raises ImportError, which the
-dry-run reports as a skipped cell rather than silently mis-sharding.
+``shardings`` is the parameter/activation sharding-plan subsystem
+(DESIGN.md §5): ``ShardingPlan`` + per-parameter ``spec_for_param`` rules
+covering every registry architecture, consumed by launch/mesh.py,
+models/model.py and launch/dryrun.py.  ``compression`` provides gradient
+compression for the cross-pod reduction.
 """
 from . import compression
+from . import shardings
+from .shardings import (ShardingError, ShardingPlan, spec_for_param,
+                        validate_spec, validate_spec_tree)

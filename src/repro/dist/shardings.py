@@ -1,0 +1,392 @@
+"""Parameter/activation sharding plans for the LM pillar (DESIGN.md §5).
+
+This module is the "right data structure for the right scenario" layer of
+the LM stack: it maps every parameter and activation of every registry
+architecture onto the CombBLAS process grids built by ``launch/mesh.py``
+
+  single-pod: (data=16, model=16)        — the paper's √p×√p 2D grid
+  multi-pod : (pod=2, data=16, model=16) — the c×√(p/c)×√(p/c) CA 3D grid
+
+via two exports:
+
+  ``ShardingPlan``   — a frozen dataclass describing how the grid axes are
+                       spent (data/tensor/sequence/context/expert
+                       parallelism) plus the plan-side spec helpers the
+                       consumers call: ``dp()``, ``cache_spec``,
+                       ``act_spec``, ``ep_spec``, ``logits_spec``.
+  ``spec_for_param`` — the per-parameter PartitionSpec rule table, keyed
+                       by parameter path.  Every parameter family emitted
+                       by ``models/model.param_shapes`` has an EXPLICIT
+                       rule; an unknown path raises instead of silently
+                       replicating (a mis-sharded plan corrupts the
+                       §Roofline numbers, which is worse than failing
+                       loudly — DESIGN §5).
+
+Layout discipline (the Megatron/FSDP hybrid, per family):
+
+  * ``model`` axis = tensor parallelism.  Column-parallel projections
+    shard their OUTPUT dim (flattened heads × head_dim, so GQA archs with
+    n_kv_heads < model_size still divide evenly); row-parallel
+    projections shard their INPUT dim.  Embed/lm_head shard the padded
+    vocab (vocab_padded is a multiple of 256, hence of every model size
+    we build).  MoE experts live on the model axis (the expert-parallel
+    axis of ``moe_block_ep``); Mamba/SSD shards inner channels and heads.
+  * ``fsdp_axes`` (⊆ dp axes, the within-pod 'data' axis) = ZeRO-3: each
+    family additionally shards one large non-TP dim over the data axis.
+  * the 'pod' axis of the 3D mesh appears in NO parameter spec: it is
+    pure data parallelism with hierarchical gradient reduction (the
+    paper's reduced communicators, §3.3) — parameters are pod-replicated.
+
+Every emitted spec is validated against the plan's axis sizes and the
+parameter shape (``validate_spec``): unknown mesh axes, axes used twice,
+or a sharded dim not divisible by its axis size raise ``ShardingError``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping, Optional
+
+from jax.sharding import PartitionSpec as P
+
+
+class ShardingError(ValueError):
+    """A spec that would silently mis-shard: wrong axis, reuse, or a
+    sharded dimension not divisible by the axis size."""
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def _entry(axes):
+    """Normalize an axis collection to a PartitionSpec entry."""
+    axes = tuple(axes)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+# --------------------------------------------------------------------------
+# the plan
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """How the mesh axes are spent for one (arch × shape × mesh) cell.
+
+    Built by ``launch/mesh.make_plan``; consumed by ``models/model.py``
+    (param specs + activation constraints), ``models/layers.py`` (MoE
+    dispatch), ``launch/dryrun.py`` (batch/cache input shardings) and the
+    train/serve launchers.
+    """
+    dp_axes: tuple[str, ...]          # all data-parallel axes (pod, data)
+    model_axis: str                   # tensor-parallel axis name
+    model_size: int                   # size of the model axis
+    fsdp_axes: tuple[str, ...]        # ⊆ dp_axes: param-sharding (ZeRO-3)
+    seq_parallel: bool                # shard activation seq over model
+    context_parallel: bool            # decode w/ batch < dp: shard the
+    # cache SEQUENCE over the dp axes instead of the (unshardable) batch
+    dp_size: int                      # product of dp axis sizes
+    moe_ep: bool                      # shard_map expert-parallel dispatch
+    mesh: Any = None                  # jax Mesh/AbstractMesh or None
+    axis_sizes: Optional[Mapping[str, int]] = None   # name → size; derived
+    # from the mesh when one is given (make_plan fills this in)
+
+    def __post_init__(self):
+        sizes = self.axis_sizes_map()
+        for ax in self.fsdp_axes:
+            if ax not in self.dp_axes:
+                raise ShardingError(
+                    f"fsdp axis {ax!r} is not a dp axis {self.dp_axes}")
+        if self.model_axis in self.dp_axes:
+            raise ShardingError(
+                f"model axis {self.model_axis!r} overlaps dp {self.dp_axes}")
+        if sizes:
+            got = sizes.get(self.model_axis)
+            if got is not None and got != self.model_size:
+                raise ShardingError(
+                    f"model_size {self.model_size} != mesh axis "
+                    f"{self.model_axis!r} size {got}")
+            dp = [sizes[a] for a in self.dp_axes if a in sizes]
+            if len(dp) == len(self.dp_axes) and _prod(dp) != self.dp_size:
+                raise ShardingError(
+                    f"dp_size {self.dp_size} != product of dp axes "
+                    f"{dict(zip(self.dp_axes, dp))}")
+
+    # ---------------- axis bookkeeping ----------------
+    def axis_sizes_map(self) -> dict[str, int]:
+        """name → size for every mesh axis this plan can legally use."""
+        if self.mesh is not None:
+            return dict(self.mesh.shape)
+        if self.axis_sizes is not None:
+            return dict(self.axis_sizes)
+        sizes = {self.model_axis: self.model_size}
+        if len(self.dp_axes) == 1:
+            sizes[self.dp_axes[0]] = self.dp_size
+        return sizes                   # multi-dp w/o mesh: pod split unknown
+
+    def axis_size(self, entry) -> int:
+        """Total shard count of a spec entry (axis name or tuple)."""
+        if entry is None:
+            return 1
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        sizes = self.axis_sizes_map()
+        missing = [a for a in axes if a not in sizes]
+        if missing:
+            raise ShardingError(f"axes {missing} not on this plan's mesh "
+                                f"(have {sorted(sizes)})")
+        return _prod(sizes[a] for a in axes)
+
+    def fsdp_size(self) -> int:
+        return self.axis_size(_entry(self.fsdp_axes)) if self.fsdp_axes \
+            else 1
+
+    # ---------------- spec helpers (plan side) ----------------
+    def dp(self):
+        """Spec entry sharding a batch dim over ALL data axes."""
+        return _entry(self.dp_axes)
+
+    def fsdp(self):
+        """Spec entry for the parameter-sharding (ZeRO) axes, or None."""
+        return _entry(self.fsdp_axes)
+
+    def _tp_if(self, dim_size: int):
+        """Model-axis entry when the dim divides evenly, else None.
+
+        Used only for ACTIVATION/cache layouts, where an indivisible dim
+        is legitimately left whole (e.g. the MLA shared rope key has a
+        single head); parameters go through the strict rule table.
+        """
+        return self.model_axis if dim_size % self.model_size == 0 else None
+
+    def act_spec(self) -> P:
+        """(B, S, D) activation constraint at block boundaries."""
+        batch = None if self.context_parallel else self.dp()
+        seq = self.model_axis if self.seq_parallel else None
+        return P(batch, seq, None)
+
+    def logits_spec(self) -> P:
+        """(B, S, vocab_padded): vocab over model (vocab_padded is a
+        multiple of 256, so it always divides)."""
+        batch = None if self.context_parallel else self.dp()
+        return P(batch, None, self.model_axis)
+
+    def ep_spec(self) -> P:
+        """(E, C, D) MoE dispatch buffer: experts over the model axis —
+        the at-rest layout matching the expert weights, so the grouped
+        FFN runs expert-local (padding experts make E divide)."""
+        return P(self.model_axis, None, None)
+
+    def cache_spec(self, kind: str, dims: Mapping[str, int]) -> tuple:
+        """Decode-cache layout for one cache family (no leading reps dim
+        — callers prepend it: ``P(None, *plan.cache_spec(...))``).
+
+        kind='kv'      (B, S, KVH, hd)   dims: kvh, hd
+        kind='kv_flat' (B, S, X)         dims: x   (MLA latent)
+        kind='ssm'     (B, H, P, N)      dims: h
+        kind='conv'    (B, W, C)         dims: c
+
+        Batch shards over the dp axes; under context_parallel (decode
+        with batch < dp_size) the SEQUENCE dim takes the dp axes instead
+        (the §Perf cell C sequence-sharded cache).  The head-ish dim takes
+        the model axis when divisible; 'kv' falls back to sharding
+        head_dim when n_kv_heads < model_size (GQA), and the MLA shared
+        rope key (kvh=1) lands there too.
+        """
+        batch = None if self.context_parallel else self.dp()
+        seq = self.dp() if self.context_parallel else None
+        if kind == "kv":
+            kvh, hd = int(dims["kvh"]), int(dims["hd"])
+            if kvh % self.model_size == 0:
+                heads, head_dim = self.model_axis, None
+            else:
+                heads, head_dim = None, self._tp_if(hd)
+            return (batch, seq, heads, head_dim)
+        if kind == "kv_flat":
+            return (batch, seq, self._tp_if(int(dims["x"])))
+        if kind == "ssm":
+            return (batch, self._tp_if(int(dims["h"])), None, None)
+        if kind == "conv":
+            return (batch, None, self._tp_if(int(dims["c"])))
+        raise ShardingError(f"unknown cache kind {kind!r} "
+                            "(want kv | kv_flat | ssm | conv)")
+
+
+# --------------------------------------------------------------------------
+# spec validation
+# --------------------------------------------------------------------------
+
+def validate_spec(spec: P, shape: tuple, plan: ShardingPlan,
+                  path: str = "?") -> P:
+    """Check one spec against the mesh axes and the array shape.
+
+    Raises ShardingError on: rank mismatch, an axis not on the mesh, an
+    axis used on two dims, or a sharded dim not divisible by the total
+    shard count of its entry.  Returns the spec unchanged on success.
+    """
+    if len(spec) > len(shape):
+        raise ShardingError(
+            f"{path}: spec {spec} has more entries than shape {shape}")
+    seen: list[str] = []
+    for d, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for ax in axes:
+            if not isinstance(ax, str):
+                raise ShardingError(f"{path}: bad spec entry {entry!r}")
+            if ax in seen:
+                raise ShardingError(
+                    f"{path}: axis {ax!r} used on two dims of {spec}")
+            seen.append(ax)
+        n = plan.axis_size(entry)      # raises on unknown axes
+        if shape[d] % n:
+            raise ShardingError(
+                f"{path}: dim {d} of shape {shape} ({shape[d]}) is not "
+                f"divisible by {entry!r} (size {n}) in spec {spec}")
+    return spec
+
+
+def validate_spec_tree(specs, shapes, plan: ShardingPlan, prefix: str = ""):
+    """Validate a nested dict of specs against the matching shape tree.
+
+    Also checks tree congruence: the two trees must have identical keys.
+    """
+    if isinstance(shapes, dict) != isinstance(specs, dict):
+        raise ShardingError(f"{prefix or '<root>'}: tree mismatch "
+                            f"({type(specs).__name__} vs "
+                            f"{type(shapes).__name__})")
+    if isinstance(shapes, dict):
+        if set(specs) != set(shapes):
+            raise ShardingError(
+                f"{prefix or '<root>'}: key mismatch "
+                f"{sorted(set(specs) ^ set(shapes))}")
+        for k in shapes:
+            validate_spec_tree(specs[k], shapes[k], plan,
+                               f"{prefix}/{k}" if prefix else k)
+    else:
+        validate_spec(specs, tuple(shapes), plan, prefix)
+
+
+# --------------------------------------------------------------------------
+# per-parameter rules
+# --------------------------------------------------------------------------
+#
+# One rule per parameter family: (tp_dim, fsdp_dim) indices into the
+# UNSTACKED shape (block params carry a leading period-repeats dim that is
+# never sharded — it is the lax.scan carry axis).  tp_dim takes the model
+# axis; fsdp_dim takes plan.fsdp_axes.  None = that kind of sharding does
+# not apply to the family.
+#
+#   family                         shape            tp dim     fsdp dim
+#   ---------------------------------------------------------------------
+#   embed / lm_head                (Vp, D)          0 (vocab)  1 (D)
+#   vision_proj / frame_proj       (D, D)           1 (out)    0 (in)
+#   final_norm / ln1 / ln2 / kv_ln (D,)             —          0
+#   wq / wk / wv   (col-parallel)  (D, heads·hd)    1          0
+#   bq / bk / bv                   (heads·hd,)      0          —
+#   wo             (row-parallel)  (heads·hd, D)    0          1
+#   w_dkv  (MLA down-proj)         (D, lora+rope)   1          0
+#   w_ukv  (MLA up-proj)           (lora, H·(n+v))  1          0
+#   in_z / in_xbc / in_dt (mamba)  (D, inner)       1          0
+#   conv_w                         (width, chans)   1          —
+#   A_log / dt_bias / D_skip       (H,)             0          —
+#   out_proj                       (inner, D)       0          1
+#   router                         (D, E)           —          0
+#   we_g / we_1  (routed experts)  (E, D, F)        0 (E)      2 (F) †
+#   we_2                           (E, F, D)        0 (E)      1 (F) †
+#   ws_g / ws_1  (shared experts)  (Ns, D, F)       2 (F)      1 (D)
+#   ws_2                           (Ns, F, D)       1 (F)      2 (D)
+#   wg / w1        (col-parallel)  (D, F)           1          0
+#   w2             (row-parallel)  (F, D)           0          1
+#
+# † under plan.moe_ep the expert weights drop their fsdp dim: shard_map
+#   dispatch consumes them as P(model, None, None), and regathering an
+#   fsdp-sharded F inside every layer would defeat the expert-parallel
+#   regrouping (the weights stay whole per expert shard).
+
+_TOP_RULES: dict[str, tuple] = {
+    "embed":       (0, 1),
+    "lm_head":     (0, 1),
+    "final_norm":  (None, 0),
+    "vision_proj": (1, 0),
+    "frame_proj":  (1, 0),
+}
+
+_BLOCK_RULES: dict[str, tuple] = {
+    # norms
+    "ln1": (None, 0), "ln2": (None, 0), "kv_ln": (None, 0),
+    # attention (GQA + MLA share wq/wo; flattened head dims divide the
+    # model axis even when n_kv_heads < model_size)
+    "wq": (1, 0), "wk": (1, 0), "wv": (1, 0),
+    "bq": (0, None), "bk": (0, None), "bv": (0, None),
+    "wo": (0, 1),
+    "w_dkv": (1, 0), "w_ukv": (1, 0),
+    # mamba2 / SSD
+    "in_z": (1, 0), "in_xbc": (1, 0), "in_dt": (1, 0),
+    "conv_w": (1, None),
+    "A_log": (0, None), "dt_bias": (0, None), "D_skip": (0, None),
+    "out_proj": (0, 1),
+    # MoE
+    "router": (None, 0),
+    "we_g": (0, 2), "we_1": (0, 2), "we_2": (0, 1),
+    "ws_g": (2, 1), "ws_1": (2, 1), "ws_2": (1, 2),
+    # dense MLP (silu pair or gelu)
+    "wg": (1, 0), "w1": (1, 0), "w2": (0, 1),
+}
+
+_MOE_EXPERT_PARAMS = ("we_g", "we_1", "we_2")
+
+
+def spec_for_param(path: str, shape: tuple, cfg, plan: ShardingPlan) -> P:
+    """PartitionSpec for one parameter of ``models/model.param_shapes``.
+
+    path: '/'-joined tree path ('embed', 'blocks/pos3/wq', ...).
+    Raises ShardingError for unknown families or indivisible layouts —
+    there is deliberately no replicated fallback (DESIGN §5).
+    """
+    shape = tuple(shape)
+    name = path.split("/")[-1]
+    in_block = path.startswith("blocks/")
+    rules = _BLOCK_RULES if in_block else _TOP_RULES
+    if name not in rules:
+        raise ShardingError(
+            f"no sharding rule for parameter {path!r} (shape {shape}): "
+            "add its family to dist/shardings "
+            f"{'_BLOCK_RULES' if in_block else '_TOP_RULES'}")
+    tp_dim, fsdp_dim = rules[name]
+    lead = 1 if in_block else 0        # stacked period-repeats dim
+    base = shape[lead:]
+    expect = max([d for d in (tp_dim, fsdp_dim) if d is not None],
+                 default=0) + 1
+    if len(base) < expect:
+        raise ShardingError(
+            f"{path}: shape {shape} has rank {len(base)} (+{lead} stacked), "
+            f"family {name!r} expects rank ≥ {expect}")
+
+    if plan.moe_ep and name in _MOE_EXPERT_PARAMS:
+        fsdp_dim = None                # see † above
+
+    entries: list = [None] * len(shape)
+    if tp_dim is not None:
+        d = lead + tp_dim
+        if base[tp_dim] % plan.model_size:
+            raise ShardingError(
+                f"{path}: dim {d} ({base[tp_dim]}) not divisible by model "
+                f"axis {plan.model_axis!r} (size {plan.model_size}) — "
+                f"shape {shape}")
+        entries[d] = plan.model_axis
+    if fsdp_dim is not None and plan.fsdp_axes:
+        d = lead + fsdp_dim
+        n = plan.fsdp_size()
+        if base[fsdp_dim] % n:
+            raise ShardingError(
+                f"{path}: dim {d} ({base[fsdp_dim]}) not divisible by fsdp "
+                f"axes {plan.fsdp_axes} (size {n}) — shape {shape}")
+        entries[d] = plan.fsdp()
+    spec = P(*entries)
+    return validate_spec(spec, shape, plan, path)

@@ -62,7 +62,8 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
         cfg = _dc.replace(cfg, param_dtype="bfloat16")
     model = Model(cfg, plan, scan_unroll=unroll, **(model_opts or {}))
     params = init_params(cfg, abstract=True)
-    pspecs = init_param_specs(cfg, plan)
+    pspecs = init_param_specs(cfg, plan)   # validates every spec against
+    # the plan's axes/shapes — a bad plan fails loudly before lowering
     B, S = shape["batch"], shape["seq"]
     dp_total = plan.dp_size
     batch_shardable = B % dp_total == 0
@@ -176,7 +177,8 @@ def run_cell(arch, shape_name, *, multi_pod, out_dir=None, overrides=None,
         compiled = lowered.compile()
         t_compile = time.time() - t0
     print(compiled.memory_analysis())      # proves it fits
-    ca = compiled.cost_analysis()          # FLOPs/bytes for §Roofline
+    from .roofline import cost_dict
+    ca = cost_dict(compiled)               # FLOPs/bytes for §Roofline
     print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
     if probes:
         # XLA counts scan bodies once — lower 2 shallow UNROLLED probes and

@@ -11,10 +11,16 @@ from __future__ import annotations
 
 import jax
 
+PRODUCTION_SHAPES = {
+    False: ((16, 16), ("data", "model")),
+    True: ((2, 16, 16), ("pod", "data", "model")),
+}
+
+MODEL_AXIS = "model"
+
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    shape, axes = PRODUCTION_SHAPES[bool(multi_pod)]
     ndev = 1
     for s in shape:
         ndev *= s
@@ -32,15 +38,36 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_plan(cfg, *, multi_pod: bool = False, shape_kind: str = "train",
               batch: int = 0, seq_parallel: bool = False, mesh=None,
               moe_ep: bool = False):
-    """ShardingPlan matched to (mesh, arch, shape)."""
+    """ShardingPlan matched to (mesh, arch, shape).
+
+    Axis layout comes from the mesh when one is given (so tests and
+    smaller dry-runs get a consistent plan on ANY (…, data, model) mesh);
+    without a mesh it falls back to the production shapes above.  All
+    non-model axes are data parallel; only the innermost ('data') axis
+    shards parameters — the pod axis is pure DP with hierarchical grad
+    reduction (DESIGN §5).
+    """
     from ..dist.shardings import ShardingPlan
-    dp_axes = ("pod", "data") if multi_pod else ("data",)
-    dp_size = 32 if multi_pod else 16
+    if mesh is not None:
+        axes = tuple(mesh.axis_names)
+        sizes = dict(mesh.shape)
+    else:
+        shape, axes = PRODUCTION_SHAPES[bool(multi_pod)]
+        sizes = dict(zip(axes, shape))
+    if MODEL_AXIS not in sizes or len(axes) < 2:
+        raise ValueError(
+            f"plan needs a mesh with a {MODEL_AXIS!r} axis and ≥1 data "
+            f"axis, got {dict(sizes)}")
+    dp_axes = tuple(a for a in axes if a != MODEL_AXIS)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= sizes[a]
+    model_size = sizes[MODEL_AXIS]
     context_parallel = shape_kind == "decode" and batch < dp_size
     return ShardingPlan(
-        dp_axes=dp_axes, model_axis="model", model_size=16,
-        fsdp_axes=("data",),          # params sharded within a pod; the pod
-        # axis is pure DP with hierarchical grad reduction (see DESIGN §5)
+        dp_axes=dp_axes, model_axis=MODEL_AXIS, model_size=model_size,
+        fsdp_axes=(dp_axes[-1],),     # params sharded within a pod; outer
+        # dp axes (pod) are pure DP with hierarchical grad reduction
         seq_parallel=seq_parallel,
         context_parallel=context_parallel,
-        dp_size=dp_size, moe_ep=moe_ep, mesh=mesh)
+        dp_size=dp_size, moe_ep=moe_ep, mesh=mesh, axis_sizes=sizes)

@@ -92,9 +92,18 @@ def collective_bytes(hlo_text: str) -> dict:
                 total=float(sum(out.values())))
 
 
+def cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() across jax versions: older releases return
+    a one-element list of dicts, newer ones the dict itself."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def raw_metrics(compiled) -> dict:
     """Per-device flops/bytes/collective-wire-bytes of one executable."""
-    ca = compiled.cost_analysis()
+    ca = cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return dict(flops=float(ca.get("flops", 0.0)),
                 bytes=float(ca.get("bytes accessed", 0.0)),
@@ -161,7 +170,7 @@ def terms_from_raw(raw: dict, *, n_devices: int, model_flops: float,
 
 def roofline_terms(compiled, *, n_devices: int, model_flops: float = 0.0):
     """Compute the three roofline terms from a compiled executable."""
-    ca = compiled.cost_analysis()
+    ca = cost_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     bytes_accessed = float(ca.get("bytes accessed", 0.0))
     coll = collective_bytes(compiled.as_text())

@@ -396,6 +396,11 @@ def moe_block_ep(x, params, cfg: ModelConfig, plan) -> tuple[Array, Array]:
     dp = plan.dp_axes
     E = params["router"].shape[-1]
     K = cfg.top_k
+    if E % msize:
+        from ..dist.shardings import ShardingError
+        raise ShardingError(
+            f"moe_block_ep: {E} (padded) experts not divisible by the "
+            f"expert-parallel axis {m!r} (size {msize})")
     E_loc = E // msize
 
     def body(xl, router, we_g, we_1, we_2):

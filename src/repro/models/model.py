@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from functools import partial
 from typing import Any, Optional
 
@@ -167,10 +168,12 @@ def init_params(cfg: ModelConfig, seed: int = 0, abstract: bool = False):
                 if abstract:
                     out[k] = jax.ShapeDtypeStruct(v, pdt)
                 else:
+                    # stable digest of the path: Python's hash() is salted
+                    # per process (PYTHONHASHSEED), which would initialize
+                    # different params on different hosts
                     key = jax.random.fold_in(
                         jax.random.PRNGKey(seed),
-                        int.from_bytes(path.encode()[:4].ljust(4, b"x"),
-                                       "little") ^ hash(path) % (2**31))
+                        zlib.crc32(path.encode()) & 0x7FFFFFFF)
                     out[k] = _init_one(key, path, v, cfg)
         return out
 

@@ -21,17 +21,6 @@ def run_dryrun(extra, timeout=900):
     return proc.stdout
 
 
-@pytest.mark.xfail(
-    reason="repro/dist/shardings does not exist yet: launch/mesh.make_plan "
-           "and models/model.init_param_specs import ShardingPlan / "
-           "spec_for_param from it, so every dry-run cell dies with "
-           "ModuleNotFoundError before lowering. The module is the LM "
-           "pillar's parameter/activation sharding-plan subsystem "
-           "(per-param PartitionSpec rules across all registry archs + "
-           "plan.dp/cache_spec/act_spec/ep_spec/logits_spec) — tracked in "
-           "DESIGN.md §5; not stubbed here because a wrong spec tree would "
-           "silently mis-shard instead of failing loudly.",
-    strict=True)
 def test_single_and_multipod_cell(tmp_path):
     out = run_dryrun(["--arch", "mamba2-2.7b", "--shape", "long_500k",
                       "--both-meshes", "--out-dir", str(tmp_path)])
