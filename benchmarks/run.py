@@ -108,6 +108,11 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
+    if args.json and only is not None and "spgemm_local" not in only:
+        # the artifact is built from the spgemm_local rows; silently writing
+        # nothing (the old behavior) made perf-trajectory runs vacuous
+        ap.error("--json writes BENCH_spgemm.json from the spgemm_local "
+                 "rows; include spgemm_local in --only (or drop --only)")
 
     def want(name):
         return only is None or name in only

@@ -18,6 +18,11 @@ planner-default capacities (safety ×4, pow2 quantization — the caps a real
 
 ``spgemm_merge_engine_speedup`` is the headline ratio (target ≥ 1.5x);
 ``BENCH_spgemm.json`` (benchmarks/run.py --json) records the trajectory.
+
+Masked sweep (§4.7): fused masked SpGEMM (mask probed before every stage
+compaction, mask-sized caps) vs the unmasked-then-postfilter pipeline on
+the triangle-counting shape — ``spgemm_masked_speedup`` targets ≥ 1.3x and
+is gated by the CI bench-smoke job.
 """
 from __future__ import annotations
 
@@ -28,11 +33,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ARITHMETIC
-from repro.core.coo import COO, SENTINEL
+from repro.core.coo import COO, SENTINEL, ewise_intersect
 from repro.core import merge as merge_engine
 from repro.core.local_spgemm import _expand, spgemm_dense, spgemm_esc, \
     spgemm_flops
-from repro.core.plan import plan_local_spgemm, _pow2
+from repro.core.mask import local_mask
+from repro.core.plan import MASK_PUSHDOWN_RATIO, plan_local_spgemm, _pow2
 from repro.io import rmat_coo
 
 
@@ -155,6 +161,104 @@ def merge_sweep(quick=True):
     return rows
 
 
+def masked_sweep(quick=True):
+    """Fused masked SpGEMM vs unmasked-then-postfilter (§4.7).
+
+    Triangle-counting shape: L·L under the structural mask L (strict lower
+    triangle of a symmetrized RMAT graph), through the same q-stage
+    deferred merge pipeline a 2D SUMMA runs per device.
+
+      - postfilter: merge at FULL L·L capacities, then ewise-intersect the
+        materialized product with L (the seed apps/tricount.py pipeline);
+      - fused:      every stage's expanded products are probed against L's
+        packed keys before compaction, and stage/out caps come from the
+        planner's mask-intersected bound (nnz(L), not nnz(L·L)).
+
+    ``spgemm_masked_speedup`` is the acceptance ratio (target ≥ 1.3x); the
+    CI bench-smoke job gates on these rows landing in BENCH_spgemm.json.
+    """
+    rows = []
+    scale, q = 9, 8                   # default sizes (planner-default caps)
+    reps = 2 if quick else 3
+    shape, r, c, v = rmat_coo(scale, 8, seed=2)
+    n = shape[0]
+    dense = np.zeros((n, n), np.float32)
+    dense[r, c] += v
+    sym = ((dense + dense.T) != 0).astype(np.float32)
+    low = np.tril(sym, -1)
+    nnz_l = int((low != 0).sum())
+    L = COO.from_dense(jnp.asarray(low), cap=_pow2(nnz_l))    # order='row'
+    add = ARITHMETIC.add
+
+    # q SUMMA-stage product buffers of L·L (stage s: col-slab × row-slab)
+    w = n // q
+    pairs = [(_col_slab(L, s * w, (s + 1) * w, "col"),
+              _col_slab(L, s * w, (s + 1) * w, "row")) for s in range(q)]
+    max_fl = max(int(jax.device_get(spgemm_flops(x, y))) for x, y in pairs)
+    prod_cap = _pow2(max_fl * 4.0)
+    nnz_c = int(((low @ low) != 0).sum())
+    out_cap_full = _pow2(nnz_c * 1.25)          # unmasked L·L capacity
+    out_cap_mask = _pow2(nnz_l * 1.25)          # planner mask bound: nnz(L)
+    outs = [_expand(x, y, ARITHMETIC, prod_cap) for x, y in pairs]
+    stages = [(o[0], o[1], o[2],
+               jnp.minimum(o[3], prod_cap).astype(jnp.int32)) for o in outs]
+
+    def postfilter(st, l):
+        c, _ok = merge_engine.merge_stage_products(
+            st, (n, n), add, min(prod_cap, out_cap_full), out_cap_full)
+        return ewise_intersect(c, l, jnp.multiply, out_cap=out_cap_mask)
+
+    def fused(st, l):
+        c, _ok = merge_engine.merge_stage_products(
+            st, (n, n), add, min(prod_cap, out_cap_mask), out_cap_mask,
+            mask=local_mask(l))
+        return c
+
+    jp, jf = jax.jit(postfilter), jax.jit(fused)
+    ref, got = jp(stages, L), jf(stages, L)
+    np.testing.assert_allclose(np.asarray(ref.to_dense()),
+                               np.asarray(got.to_dense()),
+                               rtol=1e-4, atol=1e-4)
+    t_post = _time(jp, stages, L, reps=reps)
+    t_fused = _time(jf, stages, L, reps=reps)
+    # the §4.6 rule of thumb: fused should win (clearly) when the mask
+    # admits less than MASK_PUSHDOWN_RATIO of the unmasked output
+    ratio = nnz_l / max(nnz_c, 1)
+    meta = f"q={q}_masknnz={nnz_l}_outfull={out_cap_full}" \
+           f"_outmask={out_cap_mask}_maskratio={ratio:.2f}" \
+           f"_thresh={MASK_PUSHDOWN_RATIO}"
+    rows.append((f"spgemm_masked_postfilter_s{scale}", t_post, meta))
+    rows.append((f"spgemm_masked_fused_s{scale}", t_fused, meta))
+    rows.append((f"spgemm_masked_speedup_s{scale}",
+                 t_post / max(t_fused, 1e-9),
+                 f"target>=1.3 (mask ratio {ratio:.2f} "
+                 f"{'<' if ratio < MASK_PUSHDOWN_RATIO else '>='} "
+                 f"{MASK_PUSHDOWN_RATIO} pushdown threshold)"))
+
+    # single-tile fused masked ESC vs ESC + postfilter (informational)
+    plan = plan_local_spgemm(L, L)
+    plan_m = plan_local_spgemm(L, L, mask_nnz=nnz_l)
+    esc_post = jax.jit(lambda a, l: ewise_intersect(
+        spgemm_esc(a, a, ARITHMETIC, prod_cap=plan.prod_cap,
+                   out_cap=plan.out_cap)[0],
+        l, jnp.multiply, out_cap=plan_m.out_cap))
+    esc_fused = jax.jit(lambda a, l: spgemm_esc(
+        a, a, ARITHMETIC, prod_cap=plan_m.prod_cap, out_cap=plan_m.out_cap,
+        mask=local_mask(l))[0])
+    np.testing.assert_allclose(np.asarray(esc_post(L, L).to_dense()),
+                               np.asarray(esc_fused(L, L).to_dense()),
+                               rtol=1e-4, atol=1e-4)
+    t_ep = _time(esc_post, L, L, reps=reps)
+    t_ef = _time(esc_fused, L, L, reps=reps)
+    rows.append((f"spgemm_esc_masked_postfilter_s{scale}", t_ep,
+                 f"outcap={plan.out_cap}"))
+    rows.append((f"spgemm_esc_masked_fused_s{scale}", t_ef,
+                 f"outcap={plan_m.out_cap}"))
+    rows.append((f"spgemm_esc_masked_speedup_s{scale}",
+                 t_ep / max(t_ef, 1e-9), "single-tile ESC, informational"))
+    return rows
+
+
 def run(quick=True):
     rows = []
     rng = np.random.default_rng(0)
@@ -187,4 +291,5 @@ def run(quick=True):
         rows.append((f"spgemm_winner_d{d}", min(t_esc, t_dns),
                      "esc" if t_esc < t_dns else "dense"))
     rows.extend(merge_sweep(quick=quick))
+    rows.extend(masked_sweep(quick=quick))
     return rows

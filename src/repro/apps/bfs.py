@@ -1,8 +1,13 @@
-"""Breadth-first search via SpMSpV (the original CombBLAS demo app).
+"""Breadth-first search via masked SpMSpV (the original CombBLAS demo app).
 
 Level-synchronous BFS: the frontier is a FullyDistSpVec, each step is one
-SpMSpV over the boolean semiring followed by a piece-aligned mask against
-the visited vector (no communication — the superimposed layout payoff).
+SpMSpV over the boolean semiring with the visited (levels) vector pushed in
+as a COMPLEMENT mask (§4.7): already-visited vertices are discarded inside
+the local expansion — before the variant merges and the 'col' exchange —
+instead of being generated, shipped, and thrown away by a post-hoc
+piece-aligned filter. The planner additionally caps the output at the
+unvisited count, so sort/merge volumes shrink as the search saturates (the
+direction-optimizing payoff without the pull-side kernel).
 
 Capacities are chosen by the planner (core/plan.py) from the *current*
 frontier size each level — the local SpMSpV data structure follows the
@@ -17,7 +22,8 @@ from jax.sharding import Mesh
 
 from ..core import (BOOLEAN, DistSpMat, DistSpVec, DistVec,
                     transpose_spvec_layout)
-from ..core.matops import spvec_mask, spvec_nnz, vec_scatter_spvec
+from ..core.mask import vector_mask
+from ..core.matops import spvec_nnz, vec_scatter_spvec
 from ..core.plan import plan_spmspv, spmspv as spmspv_planned
 
 
@@ -47,9 +53,13 @@ def bfs_levels(a: DistSpMat, source: int, *, mesh: Mesh,
     while int(spvec_nnz(frontier)) > 0 and level < max_iters:
         level += 1
         fcol = transpose_spvec_layout(frontier, mesh=mesh)
+        # visited vertices (level >= 0) as a complement mask: the fused
+        # kernel emits ONLY unvisited neighbors — no post-filter pass
+        visited = vector_mask(levels, pred=lambda lv: lv >= 0,
+                              complement=True)
         nxt, _plan = spmspv_planned(a, fcol, BOOLEAN, mesh=mesh,
+                                    mask=visited,
                                     prod_cap=prod_cap, out_cap=out_cap)
-        nxt = spvec_mask(nxt, levels, lambda xv, lv: lv < 0)
         levels = vec_scatter_spvec(
             levels, nxt, lambda cur, xv: jnp.full_like(cur, level))
         frontier = nxt

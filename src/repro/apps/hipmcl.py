@@ -19,6 +19,7 @@ from jax.sharding import Mesh
 
 from ..core import ARITHMETIC, DistSpMat
 from ..core.coo import SENTINEL
+from ..core.mask import value_mask
 from ..core.matops import (mat_apply_local, mat_ewise_local, mat_reduce,
                            mat_scale_cols, mat_sum, mat_transpose, vec_apply)
 from ..core.plan import spgemm as spgemm_planned
@@ -45,9 +46,18 @@ def hipmcl(a: DistSpMat, *, mesh: Mesh, inflation: float = 2.0,
     n = a.shape[0]
     # callers should include self-loops in `a` (MCL standard practice)
     c = _normalize_cols(a, mesh=mesh)
+    # value-predicate mask (§4.7): entries of the expansion C·C already
+    # below the prune threshold are dropped inside the multiply's final
+    # merge compaction — the bulk of MCL's prune happens fused, keeping the
+    # returned iterate (and the next expansion's caps) small. C·C is
+    # column-stochastic, so the threshold means the same thing it does in
+    # the explicit prune below (which still runs post-inflation, where
+    # renormalization can push further entries under the bar).
+    expansion_mask = value_mask(lambda v: v > prune_threshold)
     prev_sum = None
     for it in range(max_iters):
         c2, _plan = spgemm_planned(c, c, ARITHMETIC, mesh=mesh,
+                                   mask=expansion_mask,
                                    prod_cap=prod_cap, out_cap=out_cap)
         # inflation
         c2 = mat_apply_local(c2, lambda t: t.apply(lambda v: v ** inflation),

@@ -1,12 +1,12 @@
-"""Triangle counting via masked SpGEMM: tri = Σ (L·L) .* L.
+"""Triangle counting via masked SpGEMM: tri = Σ (L·L)⟨L⟩.
 
 L is the strict lower triangle; (L·L)[i,j] counts k with j<k<i adjacent to
-both, masking by L keeps (i,j) edges — each triangle counted exactly once.
-The elementwise mask is tile-aligned (no communication).
-
-The L·L capacities come from the planner (symbolic pass over tile nnz with
-retry-on-overflow) — no hard-coded caps; pass ``prod_cap``/``out_cap`` only
-to override.
+both, and the structural mask L keeps (i,j) edges — each triangle counted
+exactly once. This is a TRUE masked multiply (§4.7): L is passed as the
+output mask of the SpGEMM itself, so non-edge products are discarded before
+any merge stage and the planner sizes out/stage capacities from nnz(L)
+instead of nnz(L·L) — no post-hoc ewise intersection ever materializes the
+unmasked product.
 """
 from __future__ import annotations
 
@@ -14,9 +14,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from ..core import ARITHMETIC, DistSpMat
-from ..core.coo import ewise_intersect
-from ..core.matops import (mat_apply_local, mat_ewise_local, mat_select_lower,
-                           mat_sum)
+from ..core.mask import structural
+from ..core.matops import mat_apply_local, mat_select_lower, mat_sum
 from ..core.plan import spgemm as spgemm_planned
 
 
@@ -25,9 +24,6 @@ def triangle_count(a: DistSpMat, *, mesh: Mesh, prod_cap: int | None = None,
     """Count triangles of the symmetric graph ``a`` (values ignored)."""
     ones = lambda t: t.apply(lambda v: jnp.ones_like(v))
     l = mat_select_lower(mat_apply_local(a, ones, mesh=mesh), mesh=mesh)
-    b, _plan = spgemm_planned(l, l, ARITHMETIC, mesh=mesh,
+    b, _plan = spgemm_planned(l, l, ARITHMETIC, mesh=mesh, mask=structural(l),
                               prod_cap=prod_cap, out_cap=out_cap)
-    masked = mat_ewise_local(
-        b, l, lambda t1, t2: ewise_intersect(t1, t2, jnp.multiply,
-                                             out_cap=t1.cap), mesh=mesh)
-    return int(mat_sum(masked))
+    return int(mat_sum(b))

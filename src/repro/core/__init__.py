@@ -8,6 +8,7 @@ Layering:
   local_spgemm  ESC / dense-accumulator / hybrid local multiply (§4.1)
   spmv_local    SpMV + SpMSpV variant families (§4.2–4.3)
   dist          SpParMat / FullyDist[Sp]Vec containers (§2.1–2.2)
+  mask          output masks (GraphBLAS C⟨M⟩) + membership probes (§4.7)
   spgemm        2D SUMMA (rotation/allgather) + 3D CA SpGEMM (§3.2)
   spmv          distributed SpMV / SpMSpV (§3.1)
   spmm          1.5D + true-2D SpMM
@@ -23,6 +24,8 @@ from .dist import (DistSpMat, DistSpMat3D, DistSpVec, DistVec, make_grid,
                    shard_put, specs_of)
 from .local_spgemm import (compression_ratio, spgemm_auto, spgemm_dense,
                            spgemm_esc, spgemm_flops)
+from .mask import (LocalMask, MaskSpec, complement_of, local_mask,
+                   mask_member, structural, value_mask, vector_mask)
 from .semiring import (ARITHMETIC, BOOLEAN, MAX_MIN, MAX_PLUS, MIN_PLUS,
                        MIN_SELECT2ND, Monoid, Semiring, segment_reduce,
                        semiring as make_semiring)

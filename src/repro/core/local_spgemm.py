@@ -119,14 +119,27 @@ def _expand_sorted_b(a: COO, b: COO, sr: Semiring, prod_cap: int):
 
 
 def spgemm_esc(a: COO, b: COO, sr: Semiring = ARITHMETIC, *,
-               prod_cap: int, out_cap: int,
-               order: str = "row") -> Tuple[COO, Array]:
-    """Expand-Sort-Compress SpGEMM. Returns (C, ok_flag)."""
+               prod_cap: int, out_cap: int, order: str = "row",
+               mask=None, val_pred=None) -> Tuple[COO, Array]:
+    """Expand-Sort-Compress SpGEMM. Returns (C, ok_flag).
+
+    ``mask`` (a ``mask.LocalMask``) drops expanded products before the merge
+    (the §4.7 pushdown — ``out_cap`` may then be mask-sized); ``val_pred``
+    drops merged entries by output value before the capacity clamp.
+    """
     assert a.shape[1] == b.shape[0], (a.shape, b.shape)
     rows, cols, vals, nprod, ok = _expand(a, b, sr, prod_cap)
+    shape = (a.shape[0], b.shape[1])
+    if mask is not None:
+        from .mask import filter_products
+        rows, cols, vals = filter_products(rows, cols, vals, shape, mask,
+                                           sr.add.identity)
     prods = COO(rows, cols, vals, jnp.minimum(nprod, prod_cap).astype(jnp.int32),
-                (a.shape[0], b.shape[1]), "none")
+                shape, "none")
     d = prods.dedup(sr.add, order=order)
+    if val_pred is not None:
+        from .mask import apply_val_pred
+        d = apply_val_pred(d, val_pred, sr.add.identity)
     # check the PRE-clamp nnz: with_cap truncates nnz to out_cap, so
     # testing after the clamp would never detect output overflow
     ok = ok & (d.nnz <= out_cap)
@@ -134,18 +147,26 @@ def spgemm_esc(a: COO, b: COO, sr: Semiring = ARITHMETIC, *,
 
 
 def spgemm_dense(a: COO, b: COO, sr: Semiring = ARITHMETIC, *,
-                 out_cap: int, order: str = "row") -> Tuple[COO, Array]:
+                 out_cap: int, order: str = "row",
+                 mask=None, val_pred=None) -> Tuple[COO, Array]:
     """Dense-accumulator SpGEMM (hash-table analogue; MXU path).
 
     Densifies inputs into tiles and contracts with the semiring; the
     accumulator is the dense output tile (VMEM-resident on TPU via the
-    ``semiring_matmul`` Pallas kernel — see kernels/).
+    ``semiring_matmul`` Pallas kernel — see kernels/). Masks apply on the
+    dense accumulator (the member matrix is the mask's natural dense view).
     """
     assert a.shape[1] == b.shape[0]
     zero = sr.add.identity
     ad = a.to_dense(zero)
     bd = b.to_dense(zero)
     cd = dense_semiring_matmul(ad, bd, sr)
+    if mask is not None:
+        from .mask import mask_dense
+        member = mask_dense(mask, (a.shape[0], b.shape[1]))
+        cd = jnp.where(member, cd, jnp.asarray(zero, cd.dtype))
+    if val_pred is not None:
+        cd = jnp.where(val_pred(cd), cd, jnp.asarray(zero, cd.dtype))
     c = COO.from_dense(cd, out_cap, zero=zero, order=order)
     ok = jnp.sum(cd != zero) <= out_cap
     return c, ok
@@ -166,7 +187,8 @@ def compression_ratio(a: COO, b: COO, sample_out: int | None = None) -> Array:
 def spgemm_auto(a: COO, b: COO, sr: Semiring = ARITHMETIC, *,
                 prod_cap: int, out_cap: int, order: str = "row",
                 dense_threshold: float = 4.0,
-                dense_tile_limit: int = 1 << 22) -> Tuple[COO, Array]:
+                dense_tile_limit: int = 1 << 22,
+                mask=None, val_pred=None) -> Tuple[COO, Array]:
     """Hybrid selector (paper's hash/heap hybrid, adapted).
 
     Dense-accumulator path when the estimated compression ratio is high and
@@ -177,16 +199,17 @@ def spgemm_auto(a: COO, b: COO, sr: Semiring = ARITHMETIC, *,
     m, n = a.shape[0], b.shape[1]
     if m * n > dense_tile_limit:
         return spgemm_esc(a, b, sr, prod_cap=prod_cap, out_cap=out_cap,
-                          order=order)
+                          order=order, mask=mask, val_pred=val_pred)
     ratio = compression_ratio(a, b)
 
     def dense_path(_):
-        c, ok = spgemm_dense(a, b, sr, out_cap=out_cap, order=order)
+        c, ok = spgemm_dense(a, b, sr, out_cap=out_cap, order=order,
+                             mask=mask, val_pred=val_pred)
         return c, ok
 
     def esc_path(_):
         c, ok = spgemm_esc(a, b, sr, prod_cap=prod_cap, out_cap=out_cap,
-                           order=order)
+                           order=order, mask=mask, val_pred=val_pred)
         return c, ok
 
     return jax.lax.cond(ratio >= dense_threshold, dense_path, esc_path,

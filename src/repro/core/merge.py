@@ -307,7 +307,7 @@ def _kv_dedup_window(keys, vals, nlive, add: Monoid, cap: int):
 
 
 def kv_from_products(rows, cols, vals, nprod, shape, add: Monoid,
-                     cap: int, order: str = "row"):
+                     cap: int, order: str = "row", mask=None):
     """One padded expansion buffer -> compacted sorted unique kv stream.
 
     The buffer is processed in windows of max(cap, full_cap/MAX_WINDOWS)
@@ -320,10 +320,25 @@ def kv_from_products(rows, cols, vals, nprod, shape, add: Monoid,
     distinct count, so slicing every window stream to ``cap`` is lossless
     whenever the stage fits — the pre-slice ok checks catch when it
     doesn't. Returns (keys[cap], vals[cap], n, ok).
+
+    ``mask`` (a ``mask.LocalMask``) is the mask-filter stage (§4.7): keys
+    failing the sorted-membership probe become padding BEFORE any window
+    sort, so non-mask products never enter the compaction or the merge tree
+    — the pushdown that lets masked callers run with mask-sized ``cap``.
+    ``nprod`` stays the pre-mask count: it only gates which windows can be
+    skipped as all-slack, and the live prefix is unchanged by masking.
     """
     full_cap = rows.shape[0]
     keys = pack_keys(rows, cols, shape, order)
     assert keys is not None, "kv path requires a packable tile"
+    if mask is not None:
+        from .mask import mask_member            # lazy: mask.py imports us
+        kmax = jnp.asarray(jnp.iinfo(keys.dtype).max, keys.dtype)
+        # probe with keys packed in the MASK's order (may differ from the
+        # pipeline's); the pipeline keys are only rewritten to padding
+        probe = keys if mask.order == order \
+            else pack_keys(rows, cols, shape, mask.order)
+        keys = jnp.where(mask_member(probe, mask), keys, kmax)
     win = max(cap, full_cap // MAX_WINDOWS)
     if full_cap <= win or full_cap % win != 0:
         return _kv_dedup_window(keys, vals, nprod, add, cap)
@@ -477,19 +492,21 @@ def kv_tree(items, add: Monoid, out_cap: int):
 
 
 def merge_stage_products(stages, shape, add: Monoid, stage_cap: int,
-                         out_cap: int, order: str = "row"):
+                         out_cap: int, order: str = "row", mask=None):
     """Deferred merge tree over raw expansion buffers (DESIGN.md §4.4).
 
     ``stages``: list of (rows, cols, vals, nprod) padded product buffers.
     Each stage is compacted (kv_from_products) to ``stage_cap`` slots, the
     compacted streams fold pairwise, and rows/cols decode once at the end.
+    ``mask`` (a ``mask.LocalMask``) filters every stage's products before
+    its compaction, so masked callers pass mask-sized caps (§4.7).
     Returns (COO, ok).
     """
     items = []
     ok = jnp.bool_(True)
     for (r, c, v, n) in stages:
         k, vv, ng, o = kv_from_products(r, c, v, n, shape, add, stage_cap,
-                                        order)
+                                        order, mask=mask)
         ok = ok & o
         items.append((k, vv, ng))
     k, v, n, o = kv_tree(items, add, out_cap)

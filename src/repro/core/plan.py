@@ -54,6 +54,16 @@ MEM_BUDGET_ENTRIES = 1 << 22
 # entries never amortize (DESIGN.md §4.4/§4.6).
 SORT_MERGE_ENTRIES = 1 << 13
 
+# Mask pushdown rule of thumb (DESIGN.md §4.6/§4.7): fused masking beats
+# unmasked-then-filter when the mask admits at most this fraction of the
+# unmasked output estimate — below it the mask-sized out/stage caps drop a
+# pow2 tier and every merge stage shrinks; above it only the membership
+# probe (O(log nnz(M)) per product) and the skipped post-filter pass remain,
+# which is ~parity. Capacity shrinking applies the bound unconditionally
+# (it is exact, not a heuristic); this constant documents where the *win*
+# starts (the BENCH_spgemm.json masked rows track it).
+MASK_PUSHDOWN_RATIO = 0.5
+
 
 def _pow2(x: float, lo: int = 64) -> int:
     """Round up to a power of two (compile-cache-friendly cap quantization)."""
@@ -98,12 +108,20 @@ def plan_spgemm(a: DistSpMat, b: DistSpMat | None = None, *,
                 safety: float = 4.0,
                 prod_cap: int | None = None, out_cap: int | None = None,
                 variant: str | None = None, merge: str | None = None,
+                mask=None,
                 mem_budget: int = MEM_BUDGET_ENTRIES) -> SpGEMMPlan:
     """Size and configure a 2D SpGEMM from tile nnz statistics.
 
     The estimate assumes entries spread uniformly over tile columns (the
     random-permutation load-balance story of §2.3); skewed inputs are caught
     by the overflow flags and absorbed by the safety factor + retry growth.
+
+    ``mask`` (a ``mask.MaskSpec``): a pattern mask bounds the per-tile
+    output EXACTLY — a structural mask's C tile holds at most its mask
+    tile's nnz, a complement mask's at most dense-tile − nnz — so both the
+    out estimate and the retry ceiling intersect with the mask stats and
+    every mask-sized sort/merge stage shrinks with them (§4.7). Value-only
+    masks have unknown selectivity and change nothing here.
     """
     b = a if b is None else b
     q = a.pr
@@ -120,10 +138,24 @@ def plan_spgemm(a: DistSpMat, b: DistSpMat | None = None, *,
     # dense C tile (distinct (row, col) pairs cannot exceed it)
     flops_dev = np.einsum("ik,kj->ij", na, nb_) / inner
     dense_tile = float(a.mb) * float(b.nb)
-    out_est = float(min(flops_dev.max(), dense_tile))
+    out_bound = min(stage_bound * q, dense_tile)
+    if mask is not None and mask.mat is not None:
+        mn = _host_nnz(mask.mat).reshape(q, q)
+        if not mask.complement:
+            # structural (pred or not): members ⊆ stored entries
+            mask_bound = float(mn.max())
+        elif mask.pred is None:
+            # complement: admissible slots = dense tile − stored entries
+            mask_bound = float(dense_tile - mn.min())
+        else:
+            # complement of a pred-subselected mask admits UP TO the dense
+            # tile (pred may reject every stored entry) — no valid shrink
+            mask_bound = dense_tile
+        out_bound = min(out_bound, max(mask_bound, 1.0))
+    out_est = float(min(flops_dev.max(), out_bound))
 
     p_ceil = _pow2(stage_bound)
-    o_ceil = _pow2(min(stage_bound * q, dense_tile))
+    o_ceil = _pow2(out_bound)
     p_cap = min(_pow2(prod_cap or safety * stage_est), p_ceil)
     o_cap = min(_pow2(out_cap or safety * out_est), o_ceil)
     if prod_cap:
@@ -167,22 +199,26 @@ def spgemm(a: DistSpMat, b: DistSpMat | None = None,
            plan: SpGEMMPlan | None = None,
            prod_cap: int | None = None, out_cap: int | None = None,
            variant: str | None = None, merge: str | None = None,
+           mask=None,
            safety: float = 4.0, max_attempts: int = 6, growth: int = 4):
-    """Planned C = A ⊕.⊗ B. Returns (C, plan-with-attempt-count).
+    """Planned C = A ⊕.⊗ B (optionally C⟨M⟩ via ``mask``). Returns
+    (C, plan-with-attempt-count).
 
     An overflowing attempt (any device's ``ok`` flag false) is retried with
     caps grown ×``growth`` toward the worst-case ceiling — never a silently
     truncated result. Caps quantize to powers of two, so steady-state
-    iterative callers (HipMCL) reuse the compiled executable.
+    iterative callers (HipMCL) reuse the compiled executable. Pattern masks
+    shrink the planned out/stage capacities to the mask-intersected
+    estimate (§4.7), with the same retry loop as the safety net.
     """
     b = a if b is None else b
     p = plan if plan is not None else plan_spgemm(
         a, b, safety=safety, prod_cap=prod_cap, out_cap=out_cap,
-        variant=variant, merge=merge)
+        variant=variant, merge=merge, mask=mask)
     while True:
         c, ok = _spgemm_2d(a, b, sr, mesh=mesh, prod_cap=p.prod_cap,
                                   out_cap=p.out_cap, variant=p.variant,
-                                  merge=p.merge)
+                                  merge=p.merge, mask=mask)
         if bool(jnp.all(ok)):
             return c, p
         if p.attempts >= max_attempts:
@@ -233,7 +269,8 @@ def spmspv_variant_for_density(density: float) -> str:
 def plan_spmspv(a: DistSpMat, frontier_nnz: int, *, safety: float = 4.0,
                 prod_cap: int | None = None, out_cap: int | None = None,
                 variant: str | None = None, merge: str | None = None,
-                add_tag: str | None = None) -> SpMSpVPlan:
+                add_tag: str | None = None,
+                mask_allowed: int | None = None) -> SpMSpVPlan:
     """Size y = A·x for a sparse x with ``frontier_nnz`` stored entries.
 
     Expected per-device products = nnz(A_tile) · frontier density (each
@@ -241,6 +278,12 @@ def plan_spmspv(a: DistSpMat, frontier_nnz: int, *, safety: float = 4.0,
     case is the full tile, which bounds retry growth. ``add_tag`` (the
     semiring's add-monoid tag, if the caller knows it) lets the dense-merge
     rule of thumb apply — psum_scatter merging needs a 'sum' monoid.
+
+    ``mask_allowed`` (mask-admissible output rows, ``mask_allowed_count``)
+    bounds y's stored entries exactly — masked products are dropped inside
+    the expansion (§4.7), so out caps (NOT prod caps: expansion still
+    enumerates every flop) intersect with it. BFS's complement mask makes
+    this shrink as the search saturates.
     """
     nt = _host_nnz(a)
     max_tile = float(nt.max()) if nt.size else 1.0
@@ -255,9 +298,15 @@ def plan_spmspv(a: DistSpMat, frontier_nnz: int, *, safety: float = 4.0,
     # partial's entries (≤ min(max_tile, mb)) may target one piece — the
     # ceiling therefore carries a ×pc factor, or skewed outputs would hit
     # the ceiling with ok still false and the retry loop would give up
-    o_ceil = _pow2(min(max_tile, float(a.mb)) * pc)
+    out_bound = min(max_tile, float(a.mb))
+    out_est = est
+    if mask_allowed is not None:
+        allowed = float(max(int(mask_allowed), 1))
+        out_bound = min(out_bound, allowed)
+        out_est = min(out_est, allowed)
+    o_ceil = _pow2(out_bound * pc)
     p_cap = min(_pow2(prod_cap or safety * est), p_ceil)
-    o_cap = min(_pow2(out_cap or safety * est * pc), o_ceil)
+    o_cap = min(_pow2(out_cap or safety * out_est * pc), o_ceil)
     if prod_cap:
         p_cap = max(p_cap, _pow2(prod_cap))
         p_ceil = max(p_ceil, p_cap)
@@ -285,21 +334,30 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring, *, mesh,
            plan: SpMSpVPlan | None = None,
            prod_cap: int | None = None, out_cap: int | None = None,
            variant: str | None = None, merge: str | None = None,
+           mask=None,
            safety: float = 4.0, max_attempts: int = 6, growth: int = 4):
-    """Planned y = A·x (sparse x). Returns (DistSpVec, plan).
+    """Planned y = A·x (sparse x, optionally masked). Returns (DistSpVec,
+    plan).
 
     Plans from the *current* frontier size (one host scalar), so iterative
     callers (BFS) get caps that track the frontier; power-of-two
     quantization keeps the number of distinct compilations logarithmic.
+    A vector mask additionally caps the output at the admissible-row count.
     """
-    p = plan if plan is not None else plan_spmspv(
-        a, int(jax.device_get(jnp.sum(x.nnz))), safety=safety,
-        prod_cap=prod_cap, out_cap=out_cap, variant=variant, merge=merge,
-        add_tag=sr.add.tag)
+    if plan is None:
+        allowed = None
+        if mask is not None:
+            from .mask import mask_allowed_count
+            allowed = mask_allowed_count(mask)
+        plan = plan_spmspv(
+            a, int(jax.device_get(jnp.sum(x.nnz))), safety=safety,
+            prod_cap=prod_cap, out_cap=out_cap, variant=variant, merge=merge,
+            add_tag=sr.add.tag, mask_allowed=allowed)
+    p = plan
     while True:
         y, ok = _spmspv_2d(a, x, sr, mesh=mesh, variant=p.variant,
                              merge=p.merge, prod_cap=p.prod_cap,
-                             out_cap=p.out_cap)
+                             out_cap=p.out_cap, mask=mask)
         if bool(jnp.all(ok)):
             return y, p
         if p.attempts >= max_attempts:
@@ -334,18 +392,24 @@ class LocalSpGEMMPlan:
 
 def plan_local_spgemm(a: COO, b: COO, *, safety: float = 1.25,
                       dense_threshold: float = 4.0,
-                      dense_tile_limit: int = 1 << 22) -> LocalSpGEMMPlan:
+                      dense_tile_limit: int = 1 << 22,
+                      mask_nnz: int | None = None) -> LocalSpGEMMPlan:
     """Exact symbolic phase for one tile pair (paper §4.1 phase 1).
 
     ``spgemm_flops`` is exact, so ``prod_cap`` cannot overflow; ``out_cap``
-    is bounded by min(flops, dense tile). The algo pick mirrors
-    ``spgemm_auto``'s compression-ratio hybrid.
+    is bounded by min(flops, dense tile) — and by ``mask_nnz`` when the
+    caller multiplies under a structural mask (the masked output pattern is
+    a subset of the mask, §4.7). The algo pick mirrors ``spgemm_auto``'s
+    compression-ratio hybrid.
     """
     m, n = a.shape[0], b.shape[1]
     fl = int(jax.device_get(spgemm_flops(a, b)))
     ratio = float(jax.device_get(compression_ratio(a, b)))
     prod_cap = _pow2(max(fl, 1) * safety)
-    out_cap = min(_pow2(min(max(fl, 1), m * n) * safety), _pow2(m * n))
+    out_bound = min(max(fl, 1), m * n)
+    if mask_nnz is not None:
+        out_bound = min(out_bound, max(int(mask_nnz), 1))
+    out_cap = min(_pow2(out_bound * safety), _pow2(m * n))
     algo = "dense" if (ratio >= dense_threshold and m * n <= dense_tile_limit) \
         else "esc"
     return LocalSpGEMMPlan(prod_cap, out_cap, algo, fl, ratio)

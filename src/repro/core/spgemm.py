@@ -47,6 +47,7 @@ from .compat import pvary, shard_map
 from .coo import COO, SENTINEL
 from .dist import DistSpMat, DistSpMat3D, specs_of
 from .local_spgemm import _expand
+from .mask import LocalMask, MaskSpec, apply_val_pred, filter_products
 from .merge import (key_dtype, kv_empty, kv_from_products, kv_merge2,
                     kv_to_coo, kv_tree, merge_stage_products, pack_keys)
 from .semiring import ARITHMETIC, Semiring
@@ -78,11 +79,13 @@ def _tile_permute(tile: COO, axes, perm) -> COO:
     return COO(r, c, v, n, tile.shape, tile.order)
 
 
-def _merge_products(rows, cols, vals, nvalid, shape, sr, out_cap, order="row"):
+def _merge_products(rows, cols, vals, nvalid, shape, sr, out_cap,
+                    order="row", val_pred=None):
     prods = COO(rows, cols, vals,
                 jnp.minimum(nvalid, rows.shape[0]).astype(jnp.int32),
                 shape, "none")
     d = prods.dedup(sr.add, order=order)
+    d = apply_val_pred(d, val_pred, sr.add.identity)
     # overflow must be read from the PRE-clamp nnz: with_cap() truncates
     # nnz to out_cap, which would make this check vacuously true
     ok = d.nnz <= out_cap
@@ -90,7 +93,8 @@ def _merge_products(rows, cols, vals, nvalid, shape, sr, out_cap, order="row"):
 
 
 def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
-                     variant, merge):
+                     variant, merge, mask: LocalMask | None = None,
+                     val_pred=None):
     """Body run per device under shard_map for the 2D algorithm.
 
     The engine paths ('deferred'/'incremental') run at the kv level:
@@ -98,9 +102,16 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
     because a stage's distinct count is bounded by the final nnz(C), and
     checked pre-clamp by the ok flags — then rank-placement merging of the
     compacted streams, decoding rows/cols exactly once.
+
+    ``mask`` prunes every stage's expanded products against the local mask
+    tile BEFORE any merge stage (§4.7): a masked stage's distinct count is
+    bounded by the masked nnz(C), so mask-sized out/stage caps stay sound
+    (still guarded pre-clamp by the ok flags). ``val_pred`` drops merged
+    entries by output value in the final compaction.
     """
     shape = (a_tile.shape[0], b_tile.shape[1])
     stage_cap = min(prod_cap, out_cap)
+    ident = sr.add.identity
     if key_dtype(shape) is None:
         merge = "sort"        # unpackable tile: the engine needs x64 keys
 
@@ -120,25 +131,37 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
         outs = [stage(s) for s in range(q)]
         ok = jnp.all(jnp.stack([o[4] for o in outs]))
         if merge == "sort":
-            # seed path: concatenate q full padded buffers, sort once
+            # seed path: concatenate q full padded buffers, sort once —
+            # masked products are dropped per stage, before the concat
+            if mask is not None:
+                outs = [(*filter_products(r, c_, v, shape, mask, ident),
+                         n, o) for (r, c_, v, n, o) in outs]
             rows = jnp.concatenate([o[0] for o in outs])
             cols = jnp.concatenate([o[1] for o in outs])
             vals = jnp.concatenate([o[2] for o in outs])
             total = sum(o[3] for o in outs)
             c, ok2 = _merge_products(rows, cols, vals, total, shape, sr,
-                                     out_cap)
+                                     out_cap, val_pred=val_pred)
             return c, ok & ok2
-        # merge engine: compact each stage, then fold the q sorted streams
+        # merge engine: mask-filter + compact each stage, then fold the q
+        # sorted streams
         c, okm = merge_stage_products(
             [(r, c_, v, jnp.minimum(n, prod_cap)) for (r, c_, v, n, _)
              in outs],
-            shape, sr.add, stage_cap, out_cap)
-        return c, ok & okm
+            shape, sr.add, stage_cap, out_cap, mask=mask)
+        return apply_val_pred(c, val_pred, ident), ok & okm
 
     # rotation (Cannon)
     axes = ("row", "col")
     a_skew = _tile_permute(a_tile, axes, _cannon_perms(q, skew_a=True))
     b_skew = _tile_permute(b_tile, axes, _cannon_perms(q, skew_a=False))
+    if mask is not None:
+        # loop-invariant closure of the scan bodies below: mark varying so
+        # newer-jax manual-axes checks accept the device-local mask arrays
+        mask = LocalMask(pvary(mask.keys, axes),
+                         None if mask.allow is None
+                         else pvary(mask.allow, axes),
+                         mask.complement, mask.order)
 
     if merge == "incremental":
         kacc, vacc, nacc = kv_empty(shape, out_cap,
@@ -152,10 +175,11 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
         def body(carry, _):
             at, bt, kacc, vacc, nacc, ok = carry
             r, c, v, n, okx = _expand(at, bt, sr, prod_cap)
-            # compact the stage, then O(n) rank-placement merge into the
-            # sorted kv accumulator — the accumulator is never re-sorted
+            # mask-filter + compact the stage, then O(n) rank-placement
+            # merge into the sorted kv accumulator — never re-sorted
             ks, vs, ns, okc = kv_from_products(
-                r, c, v, jnp.minimum(n, prod_cap), shape, sr.add, stage_cap)
+                r, c, v, jnp.minimum(n, prod_cap), shape, sr.add, stage_cap,
+                mask=mask)
             kacc, vacc, nacc, okm = kv_merge2(kacc, vacc, nacc, ks, vs, ns,
                                               sr.add, out_cap)
             ok = ok & okx & okc & okm
@@ -166,13 +190,16 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
         ok0 = pvary(jnp.bool_(True), ("row", "col"))
         (at, bt, kacc, vacc, nacc, ok), _ = jax.lax.scan(
             body, (a_skew, b_skew, kacc, vacc, nacc, ok0), None, length=q)
-        return kv_to_coo(kacc, vacc, nacc, shape, sr.add, out_cap), ok
+        c = kv_to_coo(kacc, vacc, nacc, shape, sr.add, out_cap)
+        return apply_val_pred(c, val_pred, ident), ok
 
     if merge == "sort":
         # seed path: collect q padded product buffers, concat, sort once
         def body(carry, _):
             at, bt = carry
             r, c, v, n, okx = _expand(at, bt, sr, prod_cap)
+            if mask is not None:
+                r, c, v = filter_products(r, c, v, shape, mask, ident)
             at = _tile_permute(at, "col", _shift_perm(q, q, left=True))
             bt = _tile_permute(bt, "row", _shift_perm(q, q, left=True))
             return (at, bt), (r, c, v, jnp.minimum(n, prod_cap), okx)
@@ -183,16 +210,17 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
         cols = cs.reshape(-1)
         vals = vs.reshape((-1,) + vs.shape[2:])
         c, ok2 = _merge_products(rows, cols, vals, rows.shape[0], shape, sr,
-                                 out_cap)
+                                 out_cap, val_pred=val_pred)
         return c, jnp.all(oks) & ok2
 
-    # deferred (merge tree): compact each stage inside the scan, then fold
-    # the q sorted kv streams pairwise — no concat-and-sort
+    # deferred (merge tree): mask-filter + compact each stage inside the
+    # scan, then fold the q sorted kv streams pairwise — no concat-and-sort
     def body(carry, _):
         at, bt = carry
         r, c, v, n, okx = _expand(at, bt, sr, prod_cap)
         ks, vs, ns, okc = kv_from_products(
-            r, c, v, jnp.minimum(n, prod_cap), shape, sr.add, stage_cap)
+            r, c, v, jnp.minimum(n, prod_cap), shape, sr.add, stage_cap,
+            mask=mask)
         at = _tile_permute(at, "col", _shift_perm(q, q, left=True))
         bt = _tile_permute(bt, "row", _shift_perm(q, q, left=True))
         return (at, bt), (ks, vs, ns, okx & okc)
@@ -201,7 +229,8 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
         body, (a_skew, b_skew), None, length=q)
     items = [(ks[s], vs[s], ns[s]) for s in range(q)]
     k, v, nn, okm = kv_tree(items, sr.add, out_cap)
-    return kv_to_coo(k, v, nn, shape, sr.add, out_cap), jnp.all(oks) & okm
+    c = kv_to_coo(k, v, nn, shape, sr.add, out_cap)
+    return apply_val_pred(c, val_pred, ident), jnp.all(oks) & okm
 
 
 def vals_dtype(sr, a_tile, b_tile):
@@ -210,30 +239,43 @@ def vals_dtype(sr, a_tile, b_tile):
 
 def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
               mesh: Mesh, prod_cap: int, out_cap: int,
-              variant: str = "rotation", merge: str = "deferred"):
-    """C = A ⊕.⊗ B on the 2D grid. Returns (DistSpMat, ok[pr,pc])."""
+              variant: str = "rotation", merge: str = "deferred",
+              mask: MaskSpec | None = None):
+    """C = A ⊕.⊗ B (optionally C⟨M⟩). Returns (DistSpMat, ok[pr,pc]).
+
+    ``mask.mat`` must be tile-aligned with C (same grid, C's shape): the
+    mask never communicates, and each device prunes its expanded products
+    against its own mask tile before any merge stage (§4.7).
+    """
     assert a.grid == b.grid and a.pr == a.pc, "2D SpGEMM needs a square grid"
     assert a.shape[1] == b.shape[0]
     q = a.pr
+    mm = mask.mat if mask is not None else None
+    val_pred = mask.val_pred if mask is not None else None
+    if mask is not None and (mask.mat3 is not None or mask.vec is not None):
+        raise ValueError("spgemm_2d takes a 2D mask operand (MaskSpec.mat)")
+    if mm is not None:
+        assert mm.grid == a.grid and mm.shape == (a.shape[0], b.shape[1]), \
+            "mask must be tile-aligned with C"
 
-    def body(at, bt):
+    def body(at, bt, *mt):
+        lm = mask.local(mt[0].tile()) if mt else None
         c, ok = _local_spgemm_2d(
-            COO(at.row.reshape(-1), at.col.reshape(-1),
-                at.val.reshape((-1,) + at.val.shape[3:]), at.nnz.reshape(()),
-                (a.mb, a.nb), a.order),
-            COO(bt.row.reshape(-1), bt.col.reshape(-1),
-                bt.val.reshape((-1,) + bt.val.shape[3:]), bt.nnz.reshape(()),
-                (b.mb, b.nb), b.order),
-            sr, q, prod_cap, out_cap, variant, merge)
+            at.tile(), bt.tile(),
+            sr, q, prod_cap, out_cap, variant, merge, mask=lm,
+            val_pred=val_pred)
         return (c.row[None, None], c.col[None, None], c.val[None, None],
                 c.nnz[None, None], ok[None, None])
 
+    in_specs = (specs_of(a), specs_of(b))
+    args = (a, b)
+    if mm is not None:
+        in_specs = in_specs + (specs_of(mm),)
+        args = args + (mm,)
     out_specs = (P("row", "col", None), P("row", "col", None),
                  P("row", "col", None), P("row", "col"), P("row", "col"))
-    f = shard_map(body, mesh=mesh,
-                      in_specs=(specs_of(a), specs_of(b)),
-                      out_specs=out_specs)
-    row, col, val, nnz, ok = f(a, b)
+    f = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    row, col, val, nnz, ok = f(*args)
     # every merge path ends in dedup(order='row'), so C keeps the invariant
     cmat = DistSpMat(row, col, val, nnz, (a.shape[0], b.shape[1]), a.grid,
                      order="row")
@@ -242,10 +284,18 @@ def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
 
 def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
               mesh: Mesh, prod_cap: int, out_cap: int,
-              merge: str = "deferred", variant: str = "rotation"):
+              merge: str = "deferred", variant: str = "rotation",
+              mask: MaskSpec | None = None):
     """Communication-avoiding SpGEMM on a (L, q, q) grid (paper Fig 2).
 
     Returns (C3 [dist='csub'], ok[L,q,q]).
+
+    ``mask.mat3`` must be C-distributed ('csub', same grid). Each layer
+    all-gathers the mask's L column sub-pieces of its C tile along the
+    (cheap, nnz(M)-sized) 'layer' axis, so the per-layer 2D multiply prunes
+    expanded products before any merge stage AND before the inter-layer
+    all-to-all — masked entries never travel. ``mask.val_pred`` applies
+    only after the inter-layer merge (layer partials are incomplete sums).
     """
     assert a3.dist == "acol" and b3.dist == "brow"
     assert a3.grid == b3.grid
@@ -255,17 +305,49 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
     assert tc_a == tr_b, (tc_a, tr_b)
     kbl = tc_b // L          # C column sub-block width after layer split
     c_shape = (a3.shape[0], b3.shape[1])
+    m3 = mask.mat3 if mask is not None else None
+    val_pred = mask.val_pred if mask is not None else None
+    if mask is not None and (mask.mat is not None or mask.vec is not None):
+        raise ValueError("spgemm_3d takes a 3D mask operand (MaskSpec.mat3)")
+    if m3 is not None:
+        assert m3.dist == "csub" and m3.grid == a3.grid \
+            and m3.shape == c_shape, "mask must be C-distributed (csub)"
+        if key_dtype((tr_a, tc_b)) is None:
+            raise ValueError("masked 3D SpGEMM needs a packable C tile")
 
-    def body(at, bt):
+    def body(at, bt, *mt):
         a_tile = COO(at.row.reshape(-1), at.col.reshape(-1),
                      at.val.reshape(-1), at.nnz.reshape(()),
                      (tr_a, tc_a), a3.order)
         b_tile = COO(bt.row.reshape(-1), bt.col.reshape(-1),
                      bt.val.reshape(-1), bt.nnz.reshape(()),
                      (tr_b, tc_b), b3.order)
+        lm = None
+        if mt:
+            # assemble the FULL C-tile mask from the L csub sub-pieces:
+            # sub-piece l covers tile columns [l·kbl, (l+1)·kbl)
+            mrow = jax.lax.all_gather(mt[0].row.reshape(-1), "layer")
+            mcol = jax.lax.all_gather(mt[0].col.reshape(-1), "layer")
+            mval = jax.lax.all_gather(mt[0].val.reshape(-1), "layer")
+            fcol = jnp.where(
+                mcol != SENTINEL,
+                mcol + jnp.arange(L, dtype=jnp.int32)[:, None] * kbl,
+                SENTINEL)
+            keys = pack_keys(mrow.reshape(-1), fcol.reshape(-1),
+                             (tr_a, tc_b), "row")
+            if mask.pred is not None:
+                allow = jnp.asarray(mask.pred(mval.reshape(-1))) \
+                    & (mrow.reshape(-1) != SENTINEL)
+                keys, allow = jax.lax.sort([keys, allow], num_keys=1,
+                                           is_stable=False)
+            else:
+                allow = None
+                keys = jax.lax.sort([keys], num_keys=1)[0]
+            lm = LocalMask(keys, allow, mask.complement, "row")
         # per-layer 2D multiply ('row'/'col' collectives are layer-local)
         c_part, ok = _local_spgemm_2d(a_tile, b_tile, sr, q,
-                                      prod_cap, prod_cap, variant, merge)
+                                      prod_cap, prod_cap, variant, merge,
+                                      mask=lm)
         # ---- inter-layer all-to-all (Fig 2, right) --------------------
         # destination layer of an entry = its column sub-block
         dest = jnp.where(c_part.mask(), c_part.col // kbl, L)
@@ -307,6 +389,7 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
             # seed path: one dedup over the whole exchanged buffer
             d = COO(lr, lc, buf_v, jnp.sum(valid).astype(jnp.int32),
                     (tr_a, kbl), "none").dedup(sr.add)
+            d = apply_val_pred(d, val_pred, sr.add.identity)
             ok = ok & (d.nnz <= out_cap)         # pre-clamp nnz
             merged = d.with_cap(out_cap, sr.add.identity)
         else:
@@ -321,19 +404,23 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
                               jnp.sum(valid[sl]).astype(jnp.int32)))
             k, v, nn, okm = kv_tree(items, sr.add, out_cap)
             merged = kv_to_coo(k, v, nn, (tr_a, kbl), sr.add, out_cap)
+            merged = apply_val_pred(merged, val_pred, sr.add.identity)
             ok = ok & okm
         return (merged.row[None, None, None], merged.col[None, None, None],
                 merged.val[None, None, None], merged.nnz[None, None, None],
                 ok[None, None, None])
 
+    in_specs = (specs_of(a3), specs_of(b3))
+    args = (a3, b3)
+    if m3 is not None:
+        in_specs = in_specs + (specs_of(m3),)
+        args = args + (m3,)
     out_specs = (P("layer", "row", "col", None),
                  P("layer", "row", "col", None),
                  P("layer", "row", "col", None),
                  P("layer", "row", "col"), P("layer", "row", "col"))
-    f = shard_map(body, mesh=mesh,
-                      in_specs=(specs_of(a3), specs_of(b3)),
-                      out_specs=out_specs)
-    row, col, val, nnz, ok = f(a3, b3)
+    f = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    row, col, val, nnz, ok = f(*args)
     c3 = DistSpMat3D(row, col, val, nnz, c_shape, a3.grid, "csub",
                      order="row")  # final inter-layer merge is a row dedup
     return c3, ok
@@ -341,7 +428,8 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
 
 def spgemm_2d_batched(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC,
                       *, mesh: Mesh, prod_cap: int, out_cap: int,
-                      nbatch: int, variant: str = "rotation"):
+                      nbatch: int, variant: str = "rotation",
+                      mask: MaskSpec | None = None):
     """Batched SpGEMM (paper §7.2): form C in ``nbatch`` column batches.
 
     Each batch multiplies A by the column-slab restriction of B, yielding a
@@ -356,7 +444,7 @@ def spgemm_2d_batched(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC,
     for t in range(nbatch):
         bt = _restrict_cols(b, t * slab, slab)
         c, ok = spgemm_2d(a, bt, sr, mesh=mesh, prod_cap=prod_cap,
-                          out_cap=out_cap, variant=variant)
+                          out_cap=out_cap, variant=variant, mask=mask)
         outs.append((c, ok))
     return outs
 

@@ -93,21 +93,43 @@ def spmv_iter(a: DistSpMat, x: DistVec, sr: Semiring = ARITHMETIC, *,
 
 def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring = ARITHMETIC, *,
            mesh: Mesh, variant: str = "sort", merge: str = "sparse",
-           prod_cap: int, out_cap: int):
+           prod_cap: int, out_cap: int, mask=None):
     """y = A x with sparse x. Returns (DistSpVec layout 'row', ok[pr,pc]).
 
     merge='sparse': partial outputs stay sparse; destination pieces receive
     entries via a bucketed all-to-all along 'col' (paper §3.3 fine-grained).
     merge='dense' : partial SPA vectors are psum_scattered (tag 'sum' only).
+
+    ``mask`` (a ``mask.vector_mask`` MaskSpec over a layout-'row' DistVec,
+    piece-aligned with y) drops products on non-admissible output rows
+    inside the local expansion — BEFORE the variant merges and the 'col'
+    exchange (§4.7, direction-optimized BFS's visited pushdown). The mask
+    pieces are all-gathered along 'col' (one O(mb) boolean per device,
+    the same volume as the output reduction itself).
     """
     assert x.layout == "col"
     pr, pc = a.grid
     local_fn = L.SPMSPV_VARIANTS[variant]
     vb_out = -(-a.shape[0] // (pr * pc))
     mb = a.mb
+    mv = mask.vec if mask is not None else None
+    if mask is not None:
+        if mv is None:
+            raise ValueError("spmspv masks are dense-vector masks "
+                             "(mask.vector_mask)")
+        assert mv.layout == "row" and mv.grid == a.grid \
+            and mv.n == a.shape[0], "mask must be piece-aligned with y"
 
-    def body(at, xi, xv, xn):
+    def body(at, xi, xv, xn, *md):
         tile = at.tile()
+        allow = None
+        if md:
+            member = jnp.asarray(mask.pred(md[0].reshape(-1)))  # (vb,)
+            if mask.complement:
+                member = ~member
+            # process row i's pieces j=0..pc-1 are exactly the tile's row
+            # range [i*mb, (i+1)*mb) in j order (layout 'row')
+            allow = jax.lax.all_gather(member, "col", tiled=True)  # (mb,)
         # gather the sparse pieces of column block j (localize to block)
         xi_l = xi.reshape(-1)
         xv_l = xv.reshape(-1)
@@ -125,7 +147,8 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring = ARITHMETIC, *,
         order = jnp.argsort(gi == SENTINEL, stable=True)
         gi, gv = gi[order], gv[order]
         (yi, yv, yn), ok = local_fn(tile, gi, gv, gn, sr,
-                                    prod_cap=prod_cap, out_cap=out_cap)
+                                    prod_cap=prod_cap, out_cap=out_cap,
+                                    allow=allow)
         if merge == "dense" and sr.add.tag == "sum":
             dense = L.spvec_to_dense(yi, yv, mb, zero=0)
             piece = jax.lax.psum_scatter(dense, "col", scatter_dimension=0,
@@ -173,11 +196,14 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring = ARITHMETIC, *,
 
     out_specs = (P("row", "col", None), P("row", "col", None),
                  P("row", "col"), P("row", "col"))
+    in_specs = (specs_of(a), P("row", "col", None), P("row", "col", None),
+                P("row", "col"))
+    args = (a, x.idx, x.val, x.nnz)
+    if mv is not None:
+        in_specs = in_specs + (P("row", "col", None),)
+        args = args + (mv.data,)
     yi, yv, yn, ok = shard_map(
-        body, mesh=mesh,
-        in_specs=(specs_of(a), P("row", "col", None), P("row", "col", None),
-                  P("row", "col")),
-        out_specs=out_specs)(a, x.idx, x.val, x.nnz)
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)(*args)
     return DistSpVec(yi, yv, yn, a.shape[0], a.grid, "row"), ok
 
 

@@ -102,8 +102,14 @@ def spmv_col(a: COO, x: Array, sr: Semiring = ARITHMETIC) -> Array:
 # --------------------------------------------------------------------------
 
 def _expand_spmspv(a: COO, xi: Array, xv: Array, xnnz: Array, sr: Semiring,
-                   prod_cap: int):
-    """Products A(:,k)·x_k for every nonzero x_k. O(df) like the paper."""
+                   prod_cap: int, allow: Array | None = None):
+    """Products A(:,k)·x_k for every nonzero x_k. O(df) like the paper.
+
+    ``allow`` (dense bool over the tile's rows, or None) is the output-mask
+    pushdown (§4.7): products landing on disallowed rows are dropped HERE,
+    before any of the variant merges — the sort never sees them, the SPA
+    never scatters them, and ``out_cap`` may be sized to the allowed count.
+    """
     sa = a.sort("col")
     k = jnp.where(jnp.arange(xi.shape[0]) < xnnz, xi, SENTINEL)
     start, end = column_range(sa.col, k)
@@ -116,8 +122,11 @@ def _expand_spmspv(a: COO, xi: Array, xv: Array, xnnz: Array, sr: Semiring,
     tc = jnp.clip(t, 0, xi.shape[0] - 1)
     a_idx = jnp.clip(start[tc] + (s - off[tc]), 0, sa.cap - 1)
     valid = s < nprod
+    rr = sa.row[a_idx]
+    if allow is not None:
+        valid = valid & allow[jnp.clip(rr, 0, a.shape[0] - 1)]
     out_dtype = sr.out_dtype(a.dtype, xv.dtype)
-    rows = jnp.where(valid, sa.row[a_idx], SENTINEL)
+    rows = jnp.where(valid, rr, SENTINEL)
     vals = sr.mul(sa.val[a_idx], xv[tc]).astype(out_dtype)
     vdims = vals.shape[1:]
     vals = jnp.where(valid.reshape((-1,) + (1,) * len(vdims)), vals,
@@ -126,9 +135,10 @@ def _expand_spmspv(a: COO, xi: Array, xv: Array, xnnz: Array, sr: Semiring,
 
 
 def spmspv_sort(a: COO, xi, xv, xnnz, sr: Semiring = ARITHMETIC, *,
-                prod_cap: int, out_cap: int):
+                prod_cap: int, out_cap: int, allow=None):
     """Sort-merge SpMSpV (heap analogue). Returns ((yi, yv, ynnz), ok)."""
-    rows, vals, nprod, ok = _expand_spmspv(a, xi, xv, xnnz, sr, prod_cap)
+    rows, vals, nprod, ok = _expand_spmspv(a, xi, xv, xnnz, sr, prod_cap,
+                                           allow)
     vflat = vals.reshape(prod_cap, -1)
     ops = [rows] + [vflat[:, i] for i in range(vflat.shape[1])]
     sorted_ops = jax.lax.sort(ops, num_keys=1, is_stable=True)
@@ -153,9 +163,10 @@ def spmspv_sort(a: COO, xi, xv, xnnz, sr: Semiring = ARITHMETIC, *,
 
 
 def spmspv_spa(a: COO, xi, xv, xnnz, sr: Semiring = ARITHMETIC, *,
-               prod_cap: int, out_cap: int):
+               prod_cap: int, out_cap: int, allow=None):
     """SPA SpMSpV: dense accumulator of length m, then re-sparsify."""
-    rows, vals, nprod, ok = _expand_spmspv(a, xi, xv, xnnz, sr, prod_cap)
+    rows, vals, nprod, ok = _expand_spmspv(a, xi, xv, xnnz, sr, prod_cap,
+                                           allow)
     m = a.shape[0]
     dense = _scatter_monoid(rows, vals, m, sr.add)
     yi, yv, ynnz = spvec_from_dense(dense, out_cap, zero=sr.add.identity)
@@ -164,7 +175,8 @@ def spmspv_spa(a: COO, xi, xv, xnnz, sr: Semiring = ARITHMETIC, *,
 
 
 def spmspv_bucket(a: COO, xi, xv, xnnz, sr: Semiring = ARITHMETIC, *,
-                  prod_cap: int, out_cap: int, nbuckets: int = 16):
+                  prod_cap: int, out_cap: int, nbuckets: int = 16,
+                  allow=None):
     """Propagation-blocking SpMSpV (paper's SpMSpV-Bucket, [25]/[27]).
 
     Products are partitioned by row-bucket (radix by high bits) and each
@@ -172,7 +184,8 @@ def spmspv_bucket(a: COO, xi, xv, xnnz, sr: Semiring = ARITHMETIC, *,
     converts random scatter over m rows into nbuckets streaming passes over
     m/nbuckets-wide windows (the TPU analogue keeps each window VMEM-sized).
     """
-    rows, vals, nprod, ok = _expand_spmspv(a, xi, xv, xnnz, sr, prod_cap)
+    rows, vals, nprod, ok = _expand_spmspv(a, xi, xv, xnnz, sr, prod_cap,
+                                           allow)
     m = a.shape[0]
     bwidth = -(-m // nbuckets)
     bucket = jnp.where(rows != SENTINEL, rows // bwidth, nbuckets)
@@ -217,7 +230,7 @@ SPMSPV_VARIANTS = {
 
 
 def spmspv_auto(a: COO, xi, xv, xnnz, sr: Semiring = ARITHMETIC, *,
-                prod_cap: int, out_cap: int):
+                prod_cap: int, out_cap: int, allow=None):
     """Fig-3 rule of thumb: sort below ~0.5% vector density, bucket to ~10%,
     SPA above (paper §4.5). Density resolved at runtime via lax.cond."""
     n = a.shape[1]
@@ -225,15 +238,15 @@ def spmspv_auto(a: COO, xi, xv, xnnz, sr: Semiring = ARITHMETIC, *,
 
     def lo(_):
         return spmspv_sort(a, xi, xv, xnnz, sr, prod_cap=prod_cap,
-                           out_cap=out_cap)
+                           out_cap=out_cap, allow=allow)
 
     def mid(_):
         return spmspv_bucket(a, xi, xv, xnnz, sr, prod_cap=prod_cap,
-                             out_cap=out_cap)
+                             out_cap=out_cap, allow=allow)
 
     def hi(_):
         return spmspv_spa(a, xi, xv, xnnz, sr, prod_cap=prod_cap,
-                          out_cap=out_cap)
+                          out_cap=out_cap, allow=allow)
 
     return jax.lax.cond(
         density < 0.005, lo,

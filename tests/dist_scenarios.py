@@ -90,6 +90,78 @@ def scenario_spgemm_3d(L=4):
     print(f"PASS spgemm_3d:L{L}")
 
 
+def scenario_spgemm_2d_masked(complement=False, merge="deferred"):
+    """Masked SUMMA on a real 4x4 grid: fused == dense postfilter oracle."""
+    from repro.core import complement_of, structural
+    rng = np.random.default_rng(7)
+    mesh = make_grid(4, 4)
+    M = 96
+    da, ea = rand_coo(rng, M, M, 0.08)
+    db, eb = rand_coo(rng, M, M, 0.08)
+    dm, em = rand_coo(rng, M, M, 0.08)
+    A = DistSpMat.from_global_coo((M, M), *ea, (4, 4), mesh=mesh, cap=256)
+    B = DistSpMat.from_global_coo((M, M), *eb, (4, 4), mesh=mesh, cap=256)
+    Mm = DistSpMat.from_global_coo((M, M), *em, (4, 4), mesh=mesh, cap=256)
+    mk = complement_of(Mm) if complement else structural(Mm)
+    C, ok = spgemm_2d(A, B, ARITHMETIC, mesh=mesh, prod_cap=4096,
+                      out_cap=2048, merge=merge, mask=mk)
+    assert bool(jnp.all(ok)), "overflow"
+    member = (dm == 0) if complement else (dm != 0)
+    np.testing.assert_allclose(C.to_dense()[:M, :M], (da @ db) * member,
+                               rtol=1e-4, atol=1e-5)
+    print(f"PASS spgemm_2d_masked:complement={complement}:{merge}")
+
+
+def scenario_spgemm_3d_masked(L=2):
+    """Masked 3D CA: csub mask gathered along 'layer', pushed into the
+    per-layer 2D multiply before the inter-layer all-to-all."""
+    from repro.core import structural
+    rng = np.random.default_rng(8)
+    q = 2
+    mesh = make_grid(q, q, layers=L)
+    M = 80
+    da, ea = rand_coo(rng, M, M, 0.08)
+    db, eb = rand_coo(rng, M, M, 0.08)
+    dm, em = rand_coo(rng, M, M, 0.1)
+    A3 = DistSpMat3D.from_global_coo((M, M), *ea, (L, q, q), "acol",
+                                     mesh=mesh, cap=256)
+    B3 = DistSpMat3D.from_global_coo((M, M), *eb, (L, q, q), "brow",
+                                     mesh=mesh, cap=256)
+    M3 = DistSpMat3D.from_global_coo((M, M), *em, (L, q, q), "csub",
+                                     mesh=mesh, cap=256)
+    C3, ok = spgemm_3d(A3, B3, ARITHMETIC, mesh=mesh, prod_cap=8192,
+                       out_cap=2048, mask=structural(M3))
+    assert bool(jnp.all(ok)), "overflow"
+    np.testing.assert_allclose(C3.to_dense()[:M, :M], (da @ db) * (dm != 0),
+                               rtol=1e-4, atol=1e-5)
+    print(f"PASS spgemm_3d_masked:L{L}")
+
+
+def scenario_spmspv_masked(variant="sort"):
+    """Vector-masked SpMSpV on 4x4: admissible rows only, pre-exchange."""
+    from repro.core import vector_mask
+    rng = np.random.default_rng(9)
+    mesh = make_grid(4, 4)
+    M = 96
+    da, ea = rand_coo(rng, M, M, 0.08)
+    A = DistSpMat.from_global_coo((M, M), *ea, (4, 4), mesh=mesh, cap=256)
+    f = 7
+    idx = np.sort(rng.choice(M, f, replace=False)).astype(np.int64)
+    val = (rng.random(f) + 0.5).astype(np.float32)
+    x = DistSpVec.from_global(idx, val, M, (4, 4), cap=16, mesh=mesh)
+    lv = rng.integers(-1, 2, M).astype(np.int32)
+    levels = DistVec.from_global(lv, (4, 4), layout="row", mesh=mesh)
+    vm = vector_mask(levels, pred=lambda t: t >= 0, complement=True)
+    y, ok = spmspv(A, x, ARITHMETIC, mesh=mesh, variant=variant,
+                   prod_cap=1024, out_cap=256, mask=vm)
+    assert bool(jnp.all(ok))
+    xd = np.zeros(M, np.float32)
+    xd[idx] = val
+    np.testing.assert_allclose(y.to_global_dense()[:M],
+                               (da @ xd) * (lv < 0), rtol=1e-4, atol=1e-5)
+    print(f"PASS spmspv_masked:{variant}")
+
+
 def scenario_spmv(variant="row"):
     rng = np.random.default_rng(3)
     mesh = make_grid(4, 4)
@@ -250,6 +322,13 @@ SCENARIOS = {
     "spgemm_2d_semiring": scenario_spgemm_2d_semiring,
     "spgemm_3d": lambda: scenario_spgemm_3d(4),
     "spgemm_3d_L2": lambda: scenario_spgemm_3d(2),
+    "spgemm_2d_masked": lambda: scenario_spgemm_2d_masked(False),
+    "spgemm_2d_masked_complement": lambda: scenario_spgemm_2d_masked(True),
+    "spgemm_2d_masked_sort": lambda: scenario_spgemm_2d_masked(
+        False, "sort"),
+    "spgemm_3d_masked": lambda: scenario_spgemm_3d_masked(2),
+    "spmspv_masked": lambda: scenario_spmspv_masked("sort"),
+    "spmspv_masked_spa": lambda: scenario_spmspv_masked("spa"),
     "spmv_row": lambda: scenario_spmv("row"),
     "spmv_col": lambda: scenario_spmv("col"),
     "spmspv_sort": lambda: scenario_spmspv("sort", "sparse"),

@@ -17,6 +17,9 @@ GROUPS = {
     "spgemm2d": ["spgemm_2d", "spgemm_2d_allgather", "spgemm_2d_incremental",
                  "spgemm_2d_semiring"],
     "spgemm3d": ["spgemm_3d", "spgemm_3d_L2"],
+    "masked": ["spgemm_2d_masked", "spgemm_2d_masked_complement",
+               "spgemm_2d_masked_sort", "spgemm_3d_masked",
+               "spmspv_masked", "spmspv_masked_spa"],
     "spmv": ["spmv_row", "spmv_col", "transpose_layout"],
     "spmspv": ["spmspv_sort", "spmspv_spa_dense", "spmspv_bucket"],
     "spmm": ["spmm_15d", "spmm_2d"],

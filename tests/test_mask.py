@@ -1,0 +1,396 @@
+"""Masked-primitive semantics (DESIGN.md §4.7).
+
+The contract under test: masked SpGEMM == unmasked-then-filter, for every
+mask kind (structural / complement / mask-value predicate / output-value
+predicate), every local algorithm (ESC, dense accumulator), every 2D
+variant×merge combination the planner can pick, across tagged and
+user-defined semirings, padded and overflowing capacities. Plus the oracle
+tests: fused masked tricount == the seed post-filter pipeline on RMAT
+inputs, masked SpMSpV == post-hoc spvec_mask. Property tests draw via
+hypothesis when installed and degrade to deterministic seeds otherwise
+(tests/_hypothesis_stub).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    import sys, os
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import (ARITHMETIC, BOOLEAN, MIN_PLUS, DistSpMat, DistSpVec,
+                        DistVec, make_grid)
+from repro.core.coo import COO, SENTINEL, ewise_intersect
+from repro.core.local_spgemm import spgemm_dense, spgemm_esc
+from repro.core.mask import (LocalMask, MaskSpec, complement_of, local_mask,
+                             mask_member, structural, value_mask,
+                             vector_mask)
+from repro.core.merge import (kv_from_products, kv_to_coo,
+                              merge_stage_products, pack_keys)
+from repro.core.plan import (plan_local_spgemm, plan_spgemm, plan_spmspv,
+                             spgemm as spgemm_planned,
+                             spmspv as spmspv_planned)
+from repro.core.semiring import Monoid, Semiring
+from repro.io import rmat_coo
+
+USER_ADD = Monoid(lambda a, b: a + b + a * b, 0.0, None, "user_probab")
+USER_SR = Semiring(USER_ADD, jnp.multiply, "user")
+
+SEMIRINGS = {
+    "arithmetic": (ARITHMETIC, 0.0),
+    "min_plus": (MIN_PLUS, np.inf),
+    "user": (USER_SR, 0.0),
+}
+
+
+def rand_tile(n=24, density=0.3, seed=0, cap=384):
+    # FIXED cap across seeds: repeated cases reuse compiled executables
+    rng = np.random.default_rng(seed)
+    d = np.where(rng.random((n, n)) < density,
+                 rng.random((n, n)).astype(np.float32) + 0.5, 0.0)
+    return d, COO.from_dense(jnp.asarray(d), cap=cap)
+
+
+def rand_mask(n=24, density=0.3, seed=100, cap=384):
+    rng = np.random.default_rng(seed)
+    m = np.where(rng.random((n, n)) < density,
+                 rng.random((n, n)).astype(np.float32) + 0.01, 0.0)
+    return m, COO.from_dense(jnp.asarray(m), cap=cap)
+
+
+def semiring_matmul_ref(da, db, sr_name):
+    """Dense oracle for the supported semirings."""
+    if sr_name == "arithmetic":
+        return da @ db, 0.0
+    if sr_name == "min_plus":
+        a = np.where(da != 0, da, np.inf)
+        b = np.where(db != 0, db, np.inf)
+        out = np.min(a[:, :, None] + b[None, :, :], axis=1)
+        return out, np.inf
+    # user: a ⊕ b = a+b+ab over products a_ik*b_kj, identity 0
+    n = da.shape[0]
+    out = np.zeros((n, n), np.float64)
+    for k in range(n):
+        p = np.outer(da[:, k], db[k, :])
+        out = out + p + out * p
+    return out.astype(np.float32), 0.0
+
+
+class TestProbe:
+    def test_membership_matches_dense(self):
+        m, mt = rand_mask(seed=3)
+        lm = local_mask(mt)
+        rng = np.random.default_rng(0)
+        r = rng.integers(0, 24, 64).astype(np.int32)
+        c = rng.integers(0, 24, 64).astype(np.int32)
+        keys = pack_keys(jnp.asarray(r), jnp.asarray(c), (24, 24), "row")
+        got = np.asarray(mask_member(keys, lm))
+        np.testing.assert_array_equal(got, (m != 0)[r, c])
+        # complement flips live candidates, never padding
+        lmc = LocalMask(lm.keys, lm.allow, True)
+        gotc = np.asarray(mask_member(keys, lmc))
+        np.testing.assert_array_equal(gotc, (m == 0)[r, c])
+
+    def test_padding_never_member(self):
+        _, mt = rand_mask(seed=4)
+        lm = local_mask(mt)
+        pad = jnp.full((8,), np.int32(2**31 - 1), jnp.int32)
+        keys = pack_keys(pad, pad, (24, 24), "row")
+        assert not np.any(np.asarray(mask_member(keys, lm)))
+        lmc = LocalMask(lm.keys, lm.allow, True)
+        assert not np.any(np.asarray(mask_member(keys, lmc)))
+
+    def test_value_pred_subselects(self):
+        m, mt = rand_mask(seed=5)
+        lm = local_mask(mt, pred=lambda v: v > 0.5)
+        r, c = np.nonzero(m)
+        keys = pack_keys(jnp.asarray(r.astype(np.int32)),
+                         jnp.asarray(c.astype(np.int32)), (24, 24), "row")
+        got = np.asarray(mask_member(keys, lm))
+        np.testing.assert_array_equal(got, m[r, c] > 0.5)
+
+
+class TestLocalMaskedSpGEMM:
+    @pytest.mark.parametrize("name", sorted(SEMIRINGS))
+    @pytest.mark.parametrize("complement", [False, True])
+    def test_masked_equals_postfilter(self, name, complement):
+        sr, zero = SEMIRINGS[name]
+        for seed in range(3):
+            da, A = rand_tile(seed=seed)
+            db, B = rand_tile(seed=seed + 30)
+            m, Mt = rand_mask(seed=seed + 60)
+            lm = local_mask(Mt, complement=complement)
+            c, ok = spgemm_esc(A, B, sr, prod_cap=1 << 13, out_cap=1 << 10,
+                               mask=lm)
+            assert bool(ok)
+            ref, _ = semiring_matmul_ref(da, db, name)
+            member = (m == 0) if complement else (m != 0)
+            want = np.where(member & np.isfinite(ref) & (ref != zero),
+                            ref, zero)
+            got = np.asarray(c.to_dense(zero))
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_dense_path_matches_esc_path(self):
+        da, A = rand_tile(seed=9, density=0.4)
+        m, Mt = rand_mask(seed=10)
+        lm = local_mask(Mt)
+        c1, ok1 = spgemm_esc(A, A, ARITHMETIC, prod_cap=1 << 13,
+                             out_cap=1 << 10, mask=lm)
+        c2, ok2 = spgemm_dense(A, A, ARITHMETIC, out_cap=1 << 10, mask=lm)
+        assert bool(ok1) and bool(ok2)
+        np.testing.assert_allclose(np.asarray(c1.to_dense()),
+                                   np.asarray(c2.to_dense()), rtol=1e-4)
+
+    def test_mask_value_pred(self):
+        da, A = rand_tile(seed=11)
+        m, Mt = rand_mask(seed=12)
+        lm = local_mask(Mt, pred=lambda v: v > 0.5)
+        c, ok = spgemm_esc(A, A, ARITHMETIC, prod_cap=1 << 13,
+                           out_cap=1 << 10, mask=lm)
+        assert bool(ok)
+        want = (da @ da) * (m > 0.5)
+        np.testing.assert_allclose(np.asarray(c.to_dense()), want, rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_output_val_pred(self):
+        da, A = rand_tile(seed=13)
+        c, ok = spgemm_esc(A, A, ARITHMETIC, prod_cap=1 << 13,
+                           out_cap=1 << 10, val_pred=lambda v: v > 2.0)
+        assert bool(ok)
+        ref = da @ da
+        np.testing.assert_allclose(np.asarray(c.to_dense()),
+                                   np.where(ref > 2.0, ref, 0.0), rtol=1e-4)
+
+    def test_col_order_caller_probes_mask_correctly(self):
+        """Masked kernels running order='col' must probe with the MASK's
+        packing order — a mismatched probe silently drops real products."""
+        da, A = rand_tile(seed=30)
+        m, Mt = rand_mask(seed=31)
+        lm = local_mask(Mt)                      # packed row-major
+        c, ok = spgemm_esc(A, A, ARITHMETIC, prod_cap=1 << 13,
+                           out_cap=1 << 10, order="col", mask=lm)
+        assert bool(ok)
+        np.testing.assert_allclose(np.asarray(c.to_dense()),
+                                   (da @ da) * (m != 0), rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_overflowing_out_cap_detected(self):
+        """A mask-sized out_cap that is still too small must trip ok, not
+        silently truncate."""
+        da, A = rand_tile(seed=14, density=0.5)
+        m, Mt = rand_mask(seed=15, density=0.9)
+        lm = local_mask(Mt)
+        _, ok = spgemm_esc(A, A, ARITHMETIC, prod_cap=1 << 13, out_cap=16,
+                           mask=lm)
+        assert not bool(ok)
+
+    def test_planner_mask_bound_shrinks_out_cap(self):
+        _, A = rand_tile(seed=16, density=0.4)
+        m, Mt = rand_mask(seed=17, density=0.05)
+        p_full = plan_local_spgemm(A, A)
+        p_mask = plan_local_spgemm(A, A, mask_nnz=int((m != 0).sum()))
+        assert p_mask.out_cap < p_full.out_cap
+
+    @given(st.integers(min_value=0, max_value=10**6))
+    @settings(max_examples=10, deadline=None)
+    def test_property_masked_equals_postfilter(self, seed):
+        """Hypothesis-drawn tiles/masks: fused == unmasked-then-intersect."""
+        da, A = rand_tile(seed=seed % 997, density=0.25)
+        m, Mt = rand_mask(seed=(seed // 7) % 997, density=0.3)
+        lm = local_mask(Mt)
+        fused, ok_f = spgemm_esc(A, A, ARITHMETIC, prod_cap=1 << 13,
+                                 out_cap=1 << 10, mask=lm)
+        full, ok_u = spgemm_esc(A, A, ARITHMETIC, prod_cap=1 << 13,
+                                out_cap=1 << 10)
+        assert bool(ok_f) and bool(ok_u)
+        want = ewise_intersect(full, Mt, lambda x, y: x,
+                               out_cap=fused.cap)
+        assert int(fused.nnz) == int(want.nnz)
+        np.testing.assert_allclose(np.asarray(fused.to_dense()),
+                                   np.asarray(want.to_dense()), rtol=1e-4)
+
+
+class TestKvMaskFilterStage:
+    """The merge-engine mask-filter stage (kv pipeline, pre-compaction)."""
+
+    def test_kv_from_products_masked(self):
+        da, A = rand_tile(seed=20)
+        m, Mt = rand_mask(seed=21)
+        from repro.core.local_spgemm import _expand
+        r, c, v, n, ok = _expand(A, A, ARITHMETIC, 1 << 13)
+        lm = local_mask(Mt)
+        k, vv, ng, okk = kv_from_products(r, c, v, n, (24, 24),
+                                          ARITHMETIC.add, 1 << 10, mask=lm)
+        assert bool(okk)
+        got = kv_to_coo(k, vv, ng, (24, 24), ARITHMETIC.add, 1 << 10)
+        want = (da @ da) * (m != 0)
+        np.testing.assert_allclose(np.asarray(got.to_dense()), want,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_merge_stage_products_masked_small_caps(self):
+        """Mask-sized stage/out caps hold exactly the masked result."""
+        da, A = rand_tile(seed=22, density=0.35)
+        m, Mt = rand_mask(seed=23, density=0.1)
+        from repro.core.local_spgemm import _expand
+        halves = []
+        for lo, hi in ((0, 12), (12, 24)):
+            keep = (np.asarray(A.col) >= lo) & (np.asarray(A.col) < hi)
+            idx = np.argsort(~keep, kind="stable")
+            r = np.asarray(A.row)[idx].copy()
+            c = np.asarray(A.col)[idx].copy()
+            v = np.asarray(A.val)[idx].copy()
+            k = int(keep.sum())
+            r[k:], c[k:], v[k:] = SENTINEL, SENTINEL, 0
+            halves.append(COO(jnp.asarray(r), jnp.asarray(c), jnp.asarray(v),
+                              jnp.asarray(k, jnp.int32), A.shape, "row"))
+        rows_a = [_expand(halves[s], halves[s].transpose().sort("row"),
+                          ARITHMETIC, 1 << 12) for s in range(2)]
+        stages = [(o[0], o[1], o[2], jnp.minimum(o[3], 1 << 12))
+                  for o in rows_a]
+        mask_cap = int((m != 0).sum()) + 8
+        lm = local_mask(Mt)
+        got, ok = merge_stage_products(stages, (24, 24), ARITHMETIC.add,
+                                       mask_cap, mask_cap, mask=lm)
+        assert bool(ok)
+        ref = sum(np.asarray(h.to_dense()) @ np.asarray(h.to_dense()).T
+                  for h in halves)
+        np.testing.assert_allclose(np.asarray(got.to_dense()),
+                                   ref * (m != 0), rtol=1e-4, atol=1e-4)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_grid(1, 1)
+
+
+def make_graph(n=40, density=0.1, seed=0):
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((n, n)) < density).astype(np.float32)
+    np.fill_diagonal(dense, 0)
+    dense = np.maximum(dense, dense.T)
+    r, c = np.nonzero(dense)
+    return dense, (r.astype(np.int64), c.astype(np.int64),
+                   dense[r, c].astype(np.float32))
+
+
+class TestDistributedMasked:
+    def test_structural_matches_postfilter(self, mesh):
+        dense, (r, c, v) = make_graph(40, 0.15, seed=1)
+        A = DistSpMat.from_global_coo((40, 40), r, c, v, (1, 1), mesh=mesh,
+                                      cap=1024)
+        C, used = spgemm_planned(A, A, ARITHMETIC, mesh=mesh,
+                                 mask=structural(A))
+        want = (dense @ dense) * (dense != 0)
+        np.testing.assert_allclose(C.to_dense()[:40, :40], want, rtol=1e-4,
+                                   atol=1e-5)
+        # mask-intersected planning: structural out_cap never exceeds the
+        # unmasked plan's
+        assert plan_spgemm(A, A, mask=structural(A)).out_cap \
+            <= plan_spgemm(A, A).out_cap
+
+    def test_complement_matches_postfilter(self, mesh):
+        dense, (r, c, v) = make_graph(40, 0.15, seed=2)
+        A = DistSpMat.from_global_coo((40, 40), r, c, v, (1, 1), mesh=mesh,
+                                      cap=1024)
+        C, _ = spgemm_planned(A, A, ARITHMETIC, mesh=mesh,
+                              mask=complement_of(A))
+        want = (dense @ dense) * (dense == 0)
+        np.testing.assert_allclose(C.to_dense()[:40, :40], want, rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_complement_pred_mask_keeps_full_ceiling(self, mesh):
+        """complement_of(M, pred=...) may admit the WHOLE product (pred can
+        reject every stored mask entry) — the planner must not shrink the
+        retry ceiling below it."""
+        dense, (r, c, v) = make_graph(36, 0.3, seed=6)
+        A = DistSpMat.from_global_coo((36, 36), r, c, v, (1, 1), mesh=mesh)
+        mk = complement_of(A, pred=lambda val: val > 10.0)  # admits nothing
+        C, _ = spgemm_planned(A, A, ARITHMETIC, mesh=mesh, mask=mk)
+        np.testing.assert_allclose(C.to_dense()[:36, :36], dense @ dense,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_lowball_masked_plan_retries_to_correct(self, mesh):
+        from repro.core.plan import SpGEMMPlan
+        dense, (r, c, v) = make_graph(36, 0.3, seed=3)
+        A = DistSpMat.from_global_coo((36, 36), r, c, v, (1, 1), mesh=mesh)
+        honest = plan_spgemm(A, A, mask=structural(A))
+        lowball = SpGEMMPlan(64, 64, honest.variant, honest.merge,
+                             honest.prod_ceiling, honest.out_ceiling, 0, 0)
+        C, used = spgemm_planned(A, A, ARITHMETIC, mesh=mesh,
+                                 mask=structural(A), plan=lowball)
+        assert used.attempts > 1
+        want = (dense @ dense) * (dense != 0)
+        np.testing.assert_allclose(C.to_dense()[:36, :36], want, rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_masked_spmspv_matches_postfilter(self, mesh):
+        from repro.core.matops import spvec_mask
+        dense, (r, c, v) = make_graph(48, 0.1, seed=4)
+        A = DistSpMat.from_global_coo((48, 48), r, c, v, (1, 1), mesh=mesh,
+                                      cap=1024)
+        x = DistSpVec.from_global(np.array([0, 3], np.int64),
+                                  np.ones(2, np.bool_), 48, (1, 1), cap=256,
+                                  layout="col", mesh=mesh)
+        lv = np.where(np.arange(48) % 3 == 0, 1, -1).astype(np.int32)
+        levels = DistVec.from_global(lv, (1, 1), layout="row", mesh=mesh)
+        vm = vector_mask(levels, pred=lambda t: t >= 0, complement=True)
+        y, plan = spmspv_planned(A, x, BOOLEAN, mesh=mesh, mask=vm)
+        y_full, _ = spmspv_planned(A, x, BOOLEAN, mesh=mesh)
+        want = spvec_mask(y_full, levels, lambda xv, t: t < 0)
+        np.testing.assert_array_equal(
+            y.to_global_dense(zero=False)[:48],
+            want.to_global_dense(zero=False)[:48])
+        # planner intersects out caps with the admissible-row count
+        full_plan = plan_spmspv(A, 2)
+        masked_plan = plan_spmspv(A, 2, mask_allowed=int((lv < 0).sum()))
+        assert masked_plan.out_cap <= full_plan.out_cap
+
+    def test_maskspec_validation(self, mesh):
+        dense, (r, c, v) = make_graph(24, 0.2, seed=5)
+        A = DistSpMat.from_global_coo((24, 24), r, c, v, (1, 1), mesh=mesh)
+        with pytest.raises(ValueError):
+            MaskSpec()                               # empty
+        with pytest.raises(ValueError):
+            MaskSpec(mat=A, vec=DistVec.from_global(
+                np.zeros(24, np.float32), (1, 1)))   # two operands
+        with pytest.raises(ValueError):
+            vector_mask(DistVec.from_global(np.zeros(24, np.float32),
+                                            (1, 1)), pred=None)
+
+
+class TestTricountOracle:
+    """Fused masked tricount == the seed post-filter pipeline (RMAT)."""
+
+    @pytest.mark.parametrize("scale,deg,seed", [(5, 6, 1), (6, 4, 7)])
+    def test_fused_matches_postfilter_count(self, mesh, scale, deg, seed):
+        from repro.apps import triangle_count
+        from repro.core.matops import (mat_apply_local, mat_ewise_local,
+                                       mat_select_lower, mat_sum)
+        shape, r, c, v = rmat_coo(scale, deg, seed=seed)
+        n = shape[0]
+        dense = np.zeros((n, n), np.float32)
+        dense[r, c] = 1.0
+        dense = np.maximum(dense, dense.T)
+        np.fill_diagonal(dense, 0)
+        rr, cc = np.nonzero(dense)
+        A = DistSpMat.from_global_coo((n, n), rr.astype(np.int64),
+                                      cc.astype(np.int64), dense[rr, cc],
+                                      (1, 1), mesh=mesh)
+        got = triangle_count(A, mesh=mesh)
+
+        # the seed pipeline: full L·L, then post-hoc ewise intersection
+        ones = lambda t: t.apply(lambda x: jnp.ones_like(x))
+        l = mat_select_lower(mat_apply_local(A, ones, mesh=mesh), mesh=mesh)
+        b, _ = spgemm_planned(l, l, ARITHMETIC, mesh=mesh)
+        masked = mat_ewise_local(
+            b, l, lambda t1, t2: ewise_intersect(t1, t2, jnp.multiply,
+                                                 out_cap=t1.cap), mesh=mesh)
+        want = int(mat_sum(masked))
+        assert got == want
+        # dense oracle too
+        ref = int(round(np.trace(np.linalg.matrix_power(dense, 3)) / 6))
+        assert got == ref
