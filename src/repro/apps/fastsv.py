@@ -23,16 +23,26 @@ from jax.sharding import Mesh
 from ..core import DistSpMat, DistVec
 from ..core.assign import assign, extract
 from ..core.coo import SENTINEL
+from ..core.dist import shard_put
 from ..core.plan import spmv_variant
 from ..core.semiring import MIN_INT, Semiring
 from ..core.spmv import spmv_iter
+from ..robust.recover import CheckpointedLoop
 
 MIN_SELECT2ND_I32 = Semiring(MIN_INT, lambda a, b: b, "min_select2nd_i32")
 
 
 def fastsv(a: DistSpMat, *, mesh: Mesh, max_iters: int = 64,
-           skew_aware: bool = False) -> np.ndarray:
-    """Connected-component labels of the *symmetric* graph ``a``."""
+           skew_aware: bool = False,
+           checkpoint_dir: str | None = None,
+           checkpoint_every: int = 1) -> np.ndarray:
+    """Connected-component labels of the *symmetric* graph ``a``.
+
+    ``checkpoint_dir`` checkpoints the parent vector each hooking iteration
+    (robust/recover.CheckpointedLoop) — a crashed run resumed with the same
+    directory finishes bitwise-identically. The final (cheap, idempotent)
+    pointer-jumping sweep is not checkpointed.
+    """
     n = a.shape[0]
     grid = a.grid
     pr, pc = grid
@@ -49,10 +59,13 @@ def fastsv(a: DistSpMat, *, mesh: Mesh, max_iters: int = 64,
     rcap = max(npad, 64)
     variant = spmv_variant(a)   # planner: match the tile's sort order
 
-    for it in range(max_iters):
-        f_old = f
+    # loop body as a pure function of the flat state dict — the SAME body
+    # runs bare and checkpointed, which is what makes resume bitwise-exact
+    def body(it, state):
+        f_old = shard_put(DistVec(jnp.asarray(state["f"]), n, grid, "col"),
+                          mesh)
         # gf = f[f]  (grandparents)
-        gf_vals, ok = extract(f, f.data.astype(jnp.int32), mesh=mesh,
+        gf_vals, ok = extract(f_old, f_old.data.astype(jnp.int32), mesh=mesh,
                               route_cap=rcap)
         assert bool(jnp.all(ok))
         gf = DistVec(gf_vals, n, grid, "col")
@@ -60,15 +73,17 @@ def fastsv(a: DistSpMat, *, mesh: Mesh, max_iters: int = 64,
         h = spmv_iter(a, gf, MIN_SELECT2ND_I32, mesh=mesh,   # layout 'col'
                       variant=variant)
         # stochastic hooking: f[f_old[u]] = min(·, h[u]) — distributed assign
-        f2, ok = assign(f, f_old.data.astype(jnp.int32), h.data, mesh=mesh,
-                        add=MIN_INT, accumulate=True, skew_aware=skew_aware,
-                        route_cap=rcap)
+        f2, ok = assign(f_old, f_old.data.astype(jnp.int32), h.data,
+                        mesh=mesh, add=MIN_INT, accumulate=True,
+                        skew_aware=skew_aware, route_cap=rcap)
         assert bool(jnp.all(ok))
         # aggressive hooking + shortcutting (piece-aligned, no comm)
-        f = DistVec(jnp.minimum(jnp.minimum(f2.data, h.data), gf.data),
-                    n, grid, "col")
-        if bool(jnp.all(f.data == f_old.data)):
-            break
+        fd = jnp.minimum(jnp.minimum(f2.data, h.data), gf.data)
+        return {"f": fd}, bool(jnp.all(fd == f_old.data))
+
+    loop = CheckpointedLoop(checkpoint_dir, every=checkpoint_every)
+    state = loop.run({"f": f.data}, body, max_iters)
+    f = DistVec(jnp.asarray(state["f"]), n, grid, "col")
     # final pointer jumping to full convergence
     for _ in range(max_iters):
         gf_vals, _ = extract(f, f.data.astype(jnp.int32), mesh=mesh,

@@ -19,10 +19,12 @@ from jax.sharding import Mesh
 
 from ..core import ARITHMETIC, DistSpMat
 from ..core.coo import SENTINEL
+from ..core.dist import shard_put
 from ..core.mask import value_mask
 from ..core.matops import (mat_apply_local, mat_ewise_local, mat_reduce,
                            mat_scale_cols, mat_sum, mat_transpose, vec_apply)
 from ..core.plan import spgemm as spgemm_planned
+from ..robust.recover import CheckpointedLoop
 from .fastsv import fastsv
 
 
@@ -36,12 +38,21 @@ def _normalize_cols(a: DistSpMat, *, mesh: Mesh) -> DistSpMat:
 def hipmcl(a: DistSpMat, *, mesh: Mesh, inflation: float = 2.0,
            prune_threshold: float = 1e-4, max_iters: int = 20,
            prod_cap: int | None = None, out_cap: int | None = None,
-           tol: float = 1e-5) -> np.ndarray:
+           tol: float = 1e-5,
+           checkpoint_dir: str | None = None,
+           checkpoint_every: int = 1) -> np.ndarray:
     """Cluster the graph; returns per-vertex cluster labels.
 
     Expansion capacities are re-planned each iteration from the current
     iterate's tile nnz (pruning keeps them shrinking) and grown on overflow
     — the caps in the signature are optional overrides only.
+
+    ``checkpoint_dir`` checkpoints the iterate each MCL iteration (the
+    paper's flagship runs for days — robust/recover.CheckpointedLoop).
+    State restores manifest-driven (no shape template) because the
+    re-planned capacities change the iterate's array shapes between
+    iterations; a crashed run resumed with the same directory finishes
+    bitwise-identically.
     """
     n = a.shape[0]
     # callers should include self-loops in `a` (MCL standard practice)
@@ -54,8 +65,27 @@ def hipmcl(a: DistSpMat, *, mesh: Mesh, inflation: float = 2.0,
     # the explicit prune below (which still runs post-inflation, where
     # renormalization can push further entries under the bar).
     expansion_mask = value_mask(lambda v: v > prune_threshold)
-    prev_sum = None
-    for it in range(max_iters):
+
+    def pack_state(c: DistSpMat, prev_sum: float) -> dict:
+        # flat arrays only: per-iteration re-planning changes cap shapes,
+        # so restore is manifest-driven (checkpoint.restore_flat) — the
+        # order tag rides along as bytes
+        return {"row": c.row, "col": c.col, "val": c.val, "nnz": c.nnz,
+                "order": np.frombuffer(c.order.encode(), dtype=np.uint8),
+                "prev_sum": np.float64(prev_sum)}
+
+    def unpack_state(state: dict):
+        order = bytes(np.asarray(state["order"])).decode()
+        c = shard_put(DistSpMat(
+            jnp.asarray(state["row"]), jnp.asarray(state["col"]),
+            jnp.asarray(state["val"]), jnp.asarray(state["nnz"]),
+            (n, n), a.grid, order=order), mesh)
+        return c, float(state["prev_sum"])
+
+    # loop body as a pure function of the flat state dict — the SAME body
+    # runs bare and checkpointed, which is what makes resume bitwise-exact
+    def body(it, state):
+        c, prev_sum = unpack_state(state)
         c2, _plan = spgemm_planned(c, c, ARITHMETIC, mesh=mesh,
                                    mask=expansion_mask,
                                    prod_cap=prod_cap, out_cap=out_cap)
@@ -69,11 +99,12 @@ def hipmcl(a: DistSpMat, *, mesh: Mesh, inflation: float = 2.0,
         c2 = _normalize_cols(c2, mesh=mesh)
         chaos = float(mat_sum(mat_ewise_local(
             c2, c2, lambda t1, t2: t1.apply(lambda v: v * v), mesh=mesh)))
-        if prev_sum is not None and abs(chaos - prev_sum) < tol:
-            c = c2
-            break
-        prev_sum = chaos
-        c = c2
+        done = (not np.isnan(prev_sum)) and abs(chaos - prev_sum) < tol
+        return pack_state(c2, chaos), done
+
+    loop = CheckpointedLoop(checkpoint_dir, every=checkpoint_every)
+    state = loop.run(pack_state(c, np.nan), body, max_iters)
+    c, _ = unpack_state(state)
     # clusters = connected components of the attractor pattern (symmetrized)
     ct = mat_transpose(c, mesh=mesh)
     from ..core.coo import COO

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..robust import audit as _audit, faults as _faults
 from . import compat
 from .coo import COO, SENTINEL
 
@@ -170,6 +171,8 @@ class DistSpMat:
             shape=(int(M), int(N)), grid=(pr, pc),
             # the lexsort above orders each tile by (lr, lc): row-major
             order="row")
+        out = _faults.corrupt_spmat("dist.assemble", out)
+        _audit.audit_obj(out, "dist.assemble", min_level=_audit.FULL)
         if mesh is not None:
             out = shard_put(out, mesh)
         return out

@@ -134,6 +134,19 @@ def filter_products(rows: Array, cols: Array, vals: Array, shape,
             jnp.where(km, vals, jnp.asarray(identity, vals.dtype)))
 
 
+def filter_tile(c: COO, m: LocalMask, identity) -> COO:
+    """Post-hoc mask application to a MERGED tile (the postfilter fallback).
+
+    Same semantics as pushing the mask through the multiply
+    (``filter_products``), applied after the fact instead — the degradation
+    ladder's first rung (robust/recover.py) computes C unmasked and calls
+    this per tile. Stable compaction preserves the tile's order tag.
+    """
+    keys = pack_keys(c.row, c.col, c.shape, m.order)
+    keep = mask_member(keys, m)
+    return c.prune(lambda _v: keep, fill=identity)
+
+
 def mask_dense(m: LocalMask, shape) -> Array:
     """Dense boolean member matrix (the dense-accumulator kernel's view)."""
     kmax = jnp.iinfo(m.keys.dtype).max

@@ -34,10 +34,25 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from ..robust import faults as _faults
 from .coo import SENTINEL
 from .semiring import Monoid, segment_reduce
 
 Array = jax.Array
+
+# Degradation switch (robust/recover.py 'legacy-dedup' rung): when set, the
+# packed-key engine's entry points route to the seed two-key implementations.
+_FORCE_LEGACY = False
+
+
+def force_legacy_dedup(on: bool):
+    """Route ``dedup``/``sort_packed`` to the seed two-key paths."""
+    global _FORCE_LEGACY
+    _FORCE_LEGACY = bool(on)
+
+
+def legacy_dedup_forced() -> bool:
+    return _FORCE_LEGACY
 
 # Cap on the per-stage compaction windows kv_from_products unrolls: bounds
 # XLA program size when prod_cap >> stage_cap (high-compression multiplies)
@@ -199,7 +214,7 @@ def sort_packed(c, order: str = "row"):
     from .coo import COO
     if c.order == order:
         return c
-    keys = pack_keys(c.row, c.col, c.shape, order)
+    keys = None if _FORCE_LEGACY else pack_keys(c.row, c.col, c.shape, order)
     if keys is None:
         return sort_two_key(c, order)
     perm = jnp.argsort(keys)                                 # stable
@@ -212,7 +227,7 @@ def dedup(c, add: Monoid, order: str = "row"):
     Tagged inputs skip the argsort (``dedup_sorted``); untagged inputs pay
     one packed-key argsort + one value gather.
     """
-    keys = pack_keys(c.row, c.col, c.shape, order)
+    keys = None if _FORCE_LEGACY else pack_keys(c.row, c.col, c.shape, order)
     if keys is None:
         return dedup_legacy(c, add, order)
     if c.order == order:
@@ -488,6 +503,11 @@ def kv_tree(items, add: Monoid, out_cap: int):
         items = nxt
     k, v, n = items[0]
     ok = ok & (n <= out_cap)
+    if _faults.trace_fault("merge.kv_ok") is not None:
+        # trace-time fault: the kv engine's overflow flag lies (reads as
+        # failed) on every call while armed — drives the planner into the
+        # degradation ladder (the 'sort' merge path never enters kv_tree)
+        ok = jnp.zeros_like(ok)
     return k, v, n, ok
 
 

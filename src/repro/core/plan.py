@@ -30,12 +30,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..robust import audit as _audit, faults as _faults, recover as _recover
 from .coo import COO
 from .dist import DistSpMat, DistSpVec
 from .local_spgemm import compression_ratio, spgemm_flops
@@ -89,6 +91,11 @@ class SpGEMMPlan:
     est_flops: float       # estimated peak per-device per-stage products
     est_out: float         # estimated peak per-device nnz(C)
     attempts: int = 1      # how many numeric attempts the retry loop used
+    degraded: tuple = ()   # ladder rungs taken (robust/recover.py), in order
+
+    def at_ceiling(self) -> bool:
+        return (self.prod_cap >= self.prod_ceiling
+                and self.out_cap >= self.out_ceiling)
 
     def grown(self, factor: int = 4) -> "SpGEMMPlan":
         if (self.prod_cap >= self.prod_ceiling
@@ -210,22 +217,86 @@ def spgemm(a: DistSpMat, b: DistSpMat | None = None,
     iterative callers (HipMCL) reuse the compiled executable. Pattern masks
     shrink the planned out/stage capacities to the mask-intersected
     estimate (§4.7), with the same retry loop as the safety net.
+
+    Robustness (robust/): a failed audit (checksum mismatch across a comm
+    boundary, invariant violation) counts as a failed attempt and re-runs
+    from the pristine host-side inputs; when plain retries keep failing —
+    caps at the worst-case ceiling with ok still false, attempts exhausted,
+    or persistent audit failures — the degradation ladder
+    (``recover.next_rung``) swaps in progressively more conservative
+    pipeline pieces, one loud warning each, recorded in ``plan.degraded``.
+    Only when the ladder is exhausted does this raise.
     """
     b = a if b is None else b
     p = plan if plan is not None else plan_spgemm(
         a, b, safety=safety, prod_cap=prod_cap, out_cap=out_cap,
         variant=variant, merge=merge, mask=mask)
+    cur_mask = mask
+    post_mask = None       # set when the 'postfilter' rung strips the mask
+    audit_fails = 0
     while True:
-        c, ok = _spgemm_2d(a, b, sr, mesh=mesh, prod_cap=p.prod_cap,
-                                  out_cap=p.out_cap, variant=p.variant,
-                                  merge=p.merge, mask=mask)
+        try:
+            c, ok = _spgemm_2d(a, b, sr, mesh=mesh, prod_cap=p.prod_cap,
+                               out_cap=p.out_cap, variant=p.variant,
+                               merge=p.merge, mask=cur_mask)
+        except _audit.AuditError as err:
+            audit_fails += 1
+            if audit_fails <= MAX_AUDIT_RETRIES:
+                warnings.warn(
+                    f"SpGEMM attempt {p.attempts} failed audit at "
+                    f"{err.site}: {err} — retrying from pristine inputs "
+                    f"({audit_fails}/{MAX_AUDIT_RETRIES})",
+                    RuntimeWarning, stacklevel=2)
+                p = dataclasses.replace(p, attempts=p.attempts + 1)
+                continue
+            rung = _recover.next_rung(p, cur_mask, kind="spgemm")
+            if rung is None:
+                raise
+            p = _recover.apply_rung(rung, p)
+            p, cur_mask, post_mask = _spgemm_take_rung(
+                rung, p, a, b, safety, cur_mask, post_mask)
+            continue
+        ok = _faults.flip_ok("plan.spgemm.ok", ok)
         if bool(jnp.all(ok)):
+            if post_mask is not None:
+                c = _recover.postfilter_2d(c, post_mask, sr, mesh=mesh)
             return c, p
-        if p.attempts >= max_attempts:
+        if p.attempts < max_attempts and not p.at_ceiling():
+            p = p.grown(growth)
+            continue
+        rung = _recover.next_rung(p, cur_mask, kind="spgemm")
+        if rung is None:
             raise RuntimeError(
                 f"SpGEMM still overflowing after {p.attempts} attempts "
-                f"(prod_cap={p.prod_cap}, out_cap={p.out_cap})")
-        p = p.grown(growth)
+                f"(prod_cap={p.prod_cap}, out_cap={p.out_cap}) — "
+                f"degradation ladder exhausted (degraded={p.degraded})")
+        p = _recover.apply_rung(rung, p)
+        p, cur_mask, post_mask = _spgemm_take_rung(
+            rung, p, a, b, safety, cur_mask, post_mask)
+
+
+# Audit failures are retried from pristine inputs this many times before
+# the retry loop escalates to the degradation ladder (transient wire faults
+# vs. a persistently-implicated pipeline stage).
+MAX_AUDIT_RETRIES = 3
+
+
+def _spgemm_take_rung(rung, p, a, b, safety, cur_mask, post_mask):
+    """Post-``apply_rung`` bookkeeping the planner owns: the 'postfilter'
+    rung strips the mask from the multiply (applied post-hoc on success),
+    which invalidates the mask-shrunk capacities — re-plan for the unmasked
+    output, keeping the grown caps as floors."""
+    p = dataclasses.replace(p, attempts=p.attempts + 1)
+    if rung != "postfilter":
+        return p, cur_mask, post_mask
+    fresh = plan_spgemm(a, b, safety=safety, variant=p.variant, merge=p.merge)
+    p = dataclasses.replace(
+        p,
+        prod_cap=max(p.prod_cap, fresh.prod_cap),
+        out_cap=max(p.out_cap, fresh.out_cap),
+        prod_ceiling=max(p.prod_ceiling, fresh.prod_ceiling),
+        out_ceiling=max(p.out_ceiling, fresh.out_ceiling))
+    return p, None, cur_mask
 
 
 # --------------------------------------------------------------------------
@@ -243,6 +314,11 @@ class SpMSpVPlan:
     out_ceiling: int
     density: float
     attempts: int = 1
+    degraded: tuple = ()   # ladder rungs taken (robust/recover.py), in order
+
+    def at_ceiling(self) -> bool:
+        return (self.prod_cap >= self.prod_ceiling
+                and self.out_cap >= self.out_ceiling)
 
     def grown(self, factor: int = 4) -> "SpMSpVPlan":
         if (self.prod_cap >= self.prod_ceiling
@@ -354,17 +430,66 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring, *, mesh,
             prod_cap=prod_cap, out_cap=out_cap, variant=variant, merge=merge,
             add_tag=sr.add.tag, mask_allowed=allowed)
     p = plan
+    cur_mask = mask
+    post_mask = None
+    audit_fails = 0
     while True:
-        y, ok = _spmspv_2d(a, x, sr, mesh=mesh, variant=p.variant,
-                             merge=p.merge, prod_cap=p.prod_cap,
-                             out_cap=p.out_cap, mask=mask)
+        try:
+            y, ok = _spmspv_2d(a, x, sr, mesh=mesh, variant=p.variant,
+                               merge=p.merge, prod_cap=p.prod_cap,
+                               out_cap=p.out_cap, mask=cur_mask)
+        except _audit.AuditError as err:
+            audit_fails += 1
+            if audit_fails <= MAX_AUDIT_RETRIES:
+                warnings.warn(
+                    f"SpMSpV attempt {p.attempts} failed audit at "
+                    f"{err.site}: {err} — retrying from pristine inputs "
+                    f"({audit_fails}/{MAX_AUDIT_RETRIES})",
+                    RuntimeWarning, stacklevel=2)
+                p = dataclasses.replace(p, attempts=p.attempts + 1)
+                continue
+            rung = _recover.next_rung(p, cur_mask, kind="spmspv")
+            if rung is None:
+                raise
+            p = _recover.apply_rung(rung, p)
+            p, cur_mask, post_mask = _spmspv_take_rung(
+                rung, p, a, x, safety, sr, cur_mask, post_mask)
+            continue
+        ok = _faults.flip_ok("plan.spmspv.ok", ok)
         if bool(jnp.all(ok)):
+            if post_mask is not None:
+                y = _recover.postfilter_spvec(y, post_mask)
             return y, p
-        if p.attempts >= max_attempts:
+        if p.attempts < max_attempts and not p.at_ceiling():
+            p = p.grown(growth)
+            continue
+        rung = _recover.next_rung(p, cur_mask, kind="spmspv")
+        if rung is None:
             raise RuntimeError(
                 f"SpMSpV still overflowing after {p.attempts} attempts "
-                f"(prod_cap={p.prod_cap}, out_cap={p.out_cap})")
-        p = p.grown(growth)
+                f"(prod_cap={p.prod_cap}, out_cap={p.out_cap}) — "
+                f"degradation ladder exhausted (degraded={p.degraded})")
+        p = _recover.apply_rung(rung, p)
+        p, cur_mask, post_mask = _spmspv_take_rung(
+            rung, p, a, x, safety, sr, cur_mask, post_mask)
+
+
+def _spmspv_take_rung(rung, p, a, x, safety, sr, cur_mask, post_mask):
+    """SpMSpV counterpart of ``_spgemm_take_rung``: dropping the mask
+    invalidates the mask-capped output sizing — re-plan unmasked."""
+    p = dataclasses.replace(p, attempts=p.attempts + 1)
+    if rung != "postfilter":
+        return p, cur_mask, post_mask
+    fresh = plan_spmspv(a, int(jax.device_get(jnp.sum(x.nnz))),
+                        safety=safety, variant=p.variant, merge=p.merge,
+                        add_tag=sr.add.tag)
+    p = dataclasses.replace(
+        p,
+        prod_cap=max(p.prod_cap, fresh.prod_cap),
+        out_cap=max(p.out_cap, fresh.out_cap),
+        prod_ceiling=max(p.prod_ceiling, fresh.prod_ceiling),
+        out_ceiling=max(p.out_ceiling, fresh.out_ceiling))
+    return p, None, cur_mask
 
 
 def spmv_variant(a: DistSpMat) -> str:

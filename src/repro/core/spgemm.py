@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..robust import audit as _audit
 from .compat import pvary, shard_map
 from .coo import COO, SENTINEL
 from .dist import DistSpMat, DistSpMat3D, specs_of
@@ -249,6 +250,11 @@ def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
     """
     assert a.grid == b.grid and a.pr == a.pc, "2D SpGEMM needs a square grid"
     assert a.shape[1] == b.shape[0]
+    # operands are about to enter the rotation/allgather collectives: this
+    # is the wire boundary the audit checksums bracket (and the fault sites
+    # corrupt) — see robust/audit.guard_exchange
+    a = _audit.guard_exchange("spgemm2d.comm_a", a)
+    b = _audit.guard_exchange("spgemm2d.comm_b", b)
     q = a.pr
     mm = mask.mat if mask is not None else None
     val_pred = mask.val_pred if mask is not None else None
@@ -279,6 +285,7 @@ def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
     # every merge path ends in dedup(order='row'), so C keeps the invariant
     cmat = DistSpMat(row, col, val, nnz, (a.shape[0], b.shape[1]), a.grid,
                      order="row")
+    _audit.audit_obj(cmat, "spgemm2d.out", min_level=_audit.FULL)
     return cmat, ok
 
 
@@ -299,6 +306,8 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
     """
     assert a3.dist == "acol" and b3.dist == "brow"
     assert a3.grid == b3.grid
+    a3 = _audit.guard_exchange("spgemm3d.comm_a", a3)
+    b3 = _audit.guard_exchange("spgemm3d.comm_b", b3)
     L, q = a3.L, a3.q
     tr_a, tc_a = a3.block_sizes()
     tr_b, tc_b = b3.block_sizes()
@@ -423,6 +432,7 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
     row, col, val, nnz, ok = f(*args)
     c3 = DistSpMat3D(row, col, val, nnz, c_shape, a3.grid, "csub",
                      order="row")  # final inter-layer merge is a row dedup
+    _audit.audit_obj(c3, "spgemm3d.out", min_level=_audit.FULL)
     return c3, ok
 
 

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..robust import audit as _audit
 from .compat import shard_map
 from .coo import COO, SENTINEL
 from .dist import DistSpMat, DistSpVec, DistVec, specs_of
@@ -108,6 +109,9 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring = ARITHMETIC, *,
     the same volume as the output reduction itself).
     """
     assert x.layout == "col"
+    # the frontier is about to be all-gathered along 'row' — the wire
+    # boundary the audit checksums bracket (robust/audit.guard_exchange)
+    x = _audit.guard_exchange("spmspv.comm_x", x)
     pr, pc = a.grid
     local_fn = L.SPMSPV_VARIANTS[variant]
     vb_out = -(-a.shape[0] // (pr * pc))
@@ -204,7 +208,9 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring = ARITHMETIC, *,
         args = args + (mv.data,)
     yi, yv, yn, ok = shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)(*args)
-    return DistSpVec(yi, yv, yn, a.shape[0], a.grid, "row"), ok
+    y = DistSpVec(yi, yv, yn, a.shape[0], a.grid, "row")
+    _audit.audit_obj(y, "spmspv.out", min_level=_audit.FULL)
+    return y, ok
 
 
 def transpose_spvec_layout(v: DistSpVec, *, mesh: Mesh) -> DistSpVec:

@@ -12,9 +12,12 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from ..robust import faults as _faults
+
 MAGIC = 0x434242494F31      # "CBBIO1"
 _DTYPES = {0: np.float64, 1: np.float32, 2: np.int64, 3: np.int32}
 _CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
+_HDR_BYTES = 48             # 6 × int64
 
 
 def write_binary(path: str, shape, rows, cols, vals, nwriters: int = 4):
@@ -43,15 +46,36 @@ def write_binary(path: str, shape, rows, cols, vals, nwriters: int = 4):
     with ThreadPoolExecutor(nwriters) as ex:
         list(ex.map(put, range(nwriters)))
     mm.flush()
+    _faults.corrupt_file("io.bin_body", path)
 
 
 def read_binary(path: str, nreaders: int = 4):
+    """Read a CBBIO1 file; malformed/truncated input raises ValueError
+    naming the file and byte offset — never an IndexError, KeyError, or a
+    memmap crash on garbage sizes."""
+    fsize = os.path.getsize(path)
+    if fsize < _HDR_BYTES:
+        raise ValueError(f"{path}: truncated header — file is {fsize} bytes, "
+                         f"need {_HDR_BYTES} (offset 0)")
     header = np.fromfile(path, np.int64, 6)
     if header[0] != MAGIC:
-        raise ValueError("bad magic")
+        raise ValueError(f"{path}: bad magic {int(header[0]):#x} at offset 0 "
+                         f"(want {MAGIC:#x})")
     _, _, m, n, nnz, code = (int(x) for x in header)
+    if code not in _DTYPES:
+        raise ValueError(f"{path}: unknown value dtype code {code} at "
+                         f"offset 40")
+    if m < 0 or n < 0 or nnz < 0:
+        raise ValueError(f"{path}: negative dimension in header "
+                         f"(m={m}, n={n}, nnz={nnz})")
     dtype = _DTYPES[code]
-    mm = np.memmap(path, np.uint8, "r", offset=48)
+    expected = _HDR_BYTES + nnz * (16 + np.dtype(dtype).itemsize)
+    if fsize < expected:
+        raise ValueError(
+            f"{path}: truncated body — header promises {nnz} entries "
+            f"({expected} bytes) but file is {fsize} bytes "
+            f"(body starts at offset {_HDR_BYTES})")
+    mm = np.memmap(path, np.uint8, "r", offset=_HDR_BYTES)
     rows = np.empty(nnz, np.int64)
     cols = np.empty(nnz, np.int64)
     vals = np.empty(nnz, dtype)

@@ -17,29 +17,68 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from ..robust import faults as _faults
+
 
 def read_mm_header(path: str):
-    """Parse the MatrixMarket banner + size line."""
+    """Parse the MatrixMarket banner + size line.
+
+    Malformed input raises ValueError naming the file and byte offset —
+    never an IndexError from a short banner or a bare int() traceback.
+    """
     with open(path, "rb") as f:
-        banner = f.readline().decode()
+        banner = f.readline().decode(errors="replace")
         if not banner.startswith("%%MatrixMarket"):
-            raise ValueError("not a MatrixMarket file")
+            raise ValueError(f"{path}: not a MatrixMarket file "
+                             f"(banner {banner[:40]!r} at offset 0)")
         toks = banner.strip().split()
+        if len(toks) < 5:
+            raise ValueError(
+                f"{path}: malformed MatrixMarket banner at offset 0 — "
+                f"want '%%MatrixMarket matrix coordinate <field> "
+                f"<symmetry>', got {banner.strip()!r}")
+        if toks[1] != "matrix" or toks[2] != "coordinate":
+            raise ValueError(
+                f"{path}: unsupported MatrixMarket object/format "
+                f"{toks[1]!r}/{toks[2]!r} (only 'matrix coordinate')")
         field, symmetry = toks[3], toks[4]
-        line = f.readline().decode()
+        off = f.tell()
+        line = f.readline().decode(errors="replace")
         while line.startswith("%"):
-            line = f.readline().decode()
-        m, n, nnz = (int(t) for t in line.split())
+            off = f.tell()
+            line = f.readline().decode(errors="replace")
+        try:
+            m, n, nnz = (int(t) for t in line.split())
+        except ValueError:
+            raise ValueError(
+                f"{path}: bad size line at offset {off} — want "
+                f"'<rows> <cols> <nnz>', got {line.strip()!r}") from None
+        if m < 0 or n < 0 or nnz < 0:
+            raise ValueError(f"{path}: negative dimension in size line at "
+                             f"offset {off}: {line.strip()!r}")
         return dict(field=field, symmetry=symmetry, m=m, n=n, nnz=nnz,
                     body_offset=f.tell())
 
 
-def _parse_text(text: str, pattern: bool):
+def _parse_text(text: str, pattern: bool, *, path: str = "?",
+                offset: int = 0):
     if not text.strip():
         return (np.empty(0, np.int64), np.empty(0, np.int64),
                 np.empty(0, np.float64))
     width = 2 if pattern else 3
-    d = np.array(text.split(), dtype=np.float64).reshape(-1, width)
+    toks = text.split()
+    try:
+        flat = np.array(toks, dtype=np.float64)
+    except ValueError:
+        raise ValueError(
+            f"{path}: non-numeric token in coordinate body near offset "
+            f"{offset}") from None
+    if len(flat) % width:
+        raise ValueError(
+            f"{path}: truncated/malformed coordinate body near offset "
+            f"{offset} — {len(flat)} tokens is not a multiple of the "
+            f"{width}-token entry width")
+    d = flat.reshape(-1, width)
     vals = np.ones(len(d), np.float64) if pattern else d[:, 2]
     return (d[:, 0].astype(np.int64) - 1, d[:, 1].astype(np.int64) - 1, vals)
 
@@ -52,12 +91,14 @@ def _read_chunk(path, start, end, body0, pattern):
             f.readline()            # partial line owned by the predecessor
         pos = f.tell()
         if pos >= end:
-            return _parse_text("", pattern)
+            return _parse_text("", pattern, path=path, offset=pos)
         buf = f.read(end - pos)
         tail = f.readline()         # finish the straddling line
         if tail:
             buf += tail
-    return _parse_text(buf.decode(), pattern)
+    buf = _faults.corrupt_bytes("io.mm_body", buf)
+    return _parse_text(buf.decode(errors="replace"), pattern,
+                       path=path, offset=pos)
 
 
 def read_mm_parallel(path: str, nreaders: int = 4):
@@ -80,6 +121,13 @@ def read_mm_parallel(path: str, nreaders: int = 4):
     rows = np.concatenate([p[0] for p in parts])
     cols = np.concatenate([p[1] for p in parts])
     vals = np.concatenate([p[2] for p in parts])
+    # pre-expansion entry count must match the header (symmetric expansion
+    # below legitimately adds entries) — a truncated body fails here loudly
+    if len(rows) != hdr["nnz"]:
+        raise ValueError(
+            f"{path}: body holds {len(rows)} entries but the size line at "
+            f"offset {body0} promised {hdr['nnz']} — truncated or "
+            "corrupted file")
     if hdr["symmetry"] == "symmetric":
         off = rows != cols
         rows, cols, vals = (np.concatenate([rows, cols[off]]),

@@ -3,12 +3,14 @@
 The mechanisms (all testable on CPU):
   1. mesh-independent checkpoints: restore onto ANY mesh/plan
      (``reshard_restore``; tested across mesh shapes in
-     tests/test_checkpoint.py)
+     tests/test_train.py::TestCheckpoint and end-to-end in
+     tests/elastic_scenario.py)
   2. deterministic data: batch(step) is pure — recovery replays exactly
-  3. StepWatchdog: wall-time budget per step; a straggling step raises
-     after ``grace`` multiples of the trailing median, letting the
-     launcher re-slice onto a hot spare (on real fleets the watchdog also
-     feeds the preemption signal)
+  3. StepWatchdog: wall-time budget per step; ``is_straggling(elapsed)``
+     returns True once a step exceeds ``grace`` multiples of the trailing
+     median — callers decide the response (robust/recover.CheckpointedLoop
+     warns; a real launcher would re-slice onto a hot spare or feed the
+     preemption signal)
 
 Operational story for real pods: the launcher (train.py) runs under a
 process supervisor; on a node failure jax.distributed re-initializes with

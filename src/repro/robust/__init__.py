@@ -1,0 +1,19 @@
+"""Robustness subsystem: fault injection, invariant audit, degradation.
+
+- :mod:`repro.robust.faults`  — deterministic seeded fault injection
+  (``REPRO_FAULTS`` env / :func:`faults.inject`) at named sites.
+- :mod:`repro.robust.audit`   — tiered invariant auditor (``REPRO_AUDIT``)
+  + checksum bracketing of communication stages.
+- :mod:`repro.robust.recover` — degradation ladder and
+  :class:`~repro.robust.recover.CheckpointedLoop`.
+
+``faults``/``audit`` are import-light (stdlib + numpy) so ``repro.core``
+modules can hook them at module scope; ``recover`` lazy-imports core.
+"""
+from . import audit, faults, recover
+from .audit import AuditError
+from .faults import InjectedCrash
+from .recover import LADDER, CheckpointedLoop
+
+__all__ = ["audit", "faults", "recover", "AuditError", "InjectedCrash",
+           "LADDER", "CheckpointedLoop"]

@@ -1,0 +1,230 @@
+"""Tiered invariant auditor for the distributed sparse containers.
+
+Every operand and result in this stack is a capacity-padded COO tile family
+with hard invariants (DESIGN.md §3/§4.3): live indices in tile bounds,
+``SENTINEL`` padding exactly beyond ``nnz``, ``nnz ≤ cap``, and — for
+``order='row'``/``'col'`` tagged objects — strictly increasing packed keys
+per tile (sorted AND deduplicated). Silent corruption almost always breaks
+one of these; this module checks them, at a level chosen per run:
+
+  ``REPRO_AUDIT=off``       (default) zero checks, zero overhead — hooks are
+                            one boolean read.
+  ``REPRO_AUDIT=boundary``  structural invariants + packed-key/value
+                            checksums bracketing every communication stage
+                            (the SUMMA/3D/SpMSpV operand boundaries). Each
+                            check costs one host transfer of the operand.
+  ``REPRO_AUDIT=full``      boundary + sortedness/dedup/finiteness sweeps on
+                            operands and results (the forensic setting).
+
+A failed check raises :class:`AuditError` naming the site; the planner's
+retry loop (core/plan.py) treats that as a failed attempt — re-running from
+the pristine host-side inputs — and escalates to the degradation ladder
+(robust/recover.py) when corruption persists.
+
+Like :mod:`repro.robust.faults`, this module imports nothing from
+``repro.core`` (core imports us); containers are duck-typed on their fields
+and ``SENTINEL`` is the shared int32-max constant.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import zlib
+
+import numpy as np
+
+from .faults import SENTINEL
+
+OFF, BOUNDARY, FULL = 0, 1, 2
+_NAMES = {"off": OFF, "boundary": BOUNDARY, "full": FULL}
+
+_env_level: int | None = None
+_override: list[int] = []
+
+
+class AuditError(RuntimeError):
+    """An invariant or checksum check failed at a named site."""
+
+    def __init__(self, msg: str, site: str = "?"):
+        super().__init__(msg)
+        self.site = site
+
+
+def level() -> int:
+    global _env_level
+    if _override:
+        return _override[-1]
+    if _env_level is None:
+        name = os.environ.get("REPRO_AUDIT", "off").strip().lower()
+        if name not in _NAMES:
+            raise ValueError(f"REPRO_AUDIT={name!r}: want off|boundary|full")
+        _env_level = _NAMES[name]
+    return _env_level
+
+
+def enabled() -> bool:
+    return level() > OFF
+
+
+@contextlib.contextmanager
+def at_level(name: str):
+    """Scoped override: ``with audit.at_level('full'): ...`` (tests)."""
+    _override.append(_NAMES[name] if isinstance(name, str) else int(name))
+    try:
+        yield
+    finally:
+        _override.pop()
+
+
+# --------------------------------------------------------------------------
+# container views (duck-typed — no repro.core import)
+# --------------------------------------------------------------------------
+
+def _views(obj):
+    """(R, C|None, V, N, (bound_r, bound_c|None), order) host views.
+
+    R/C are (ntile, cap) int, V (ntile, cap, ...), N (ntile,).
+    """
+    if hasattr(obj, "idx"):                      # DistSpVec
+        I = np.asarray(obj.idx)
+        cap = I.shape[-1]
+        return (I.reshape(-1, cap), None,
+                np.asarray(obj.val).reshape((-1, cap)
+                                            + obj.val.shape[I.ndim:]),
+                np.asarray(obj.nnz).reshape(-1), (obj.vb, None), "none")
+    R = np.asarray(obj.row)
+    cap = R.shape[-1]
+    if hasattr(obj, "block_sizes"):              # DistSpMat3D
+        tr, tc = obj.block_sizes()
+    else:                                        # DistSpMat
+        tr, tc = obj.mb, obj.nb
+    return (R.reshape(-1, cap),
+            np.asarray(obj.col).reshape(-1, cap),
+            np.asarray(obj.val).reshape((-1, cap) + obj.val.shape[R.ndim:]),
+            np.asarray(obj.nnz).reshape(-1), (tr, tc),
+            getattr(obj, "order", "none"))
+
+
+def _keys(R, C, bounds, order):
+    """Packed int64 per-entry keys in the tile's order (padding -> max)."""
+    tr, tc = bounds
+    if C is None:
+        k = R.astype(np.int64)
+        pad = R == SENTINEL
+    else:
+        pad = (R == SENTINEL) | (C == SENTINEL)
+        if order == "col":
+            k = C.astype(np.int64) * (tr + 1) + R.astype(np.int64)
+        else:
+            k = R.astype(np.int64) * (tc + 1) + C.astype(np.int64)
+    return np.where(pad, np.iinfo(np.int64).max, k)
+
+
+# --------------------------------------------------------------------------
+# invariant checks
+# --------------------------------------------------------------------------
+
+def _audit_views(R, C, V, N, bounds, order, where: str, lvl: int):
+    cap = R.shape[-1]
+    if (N < 0).any() or (N > cap).any():
+        raise AuditError(f"{where}: nnz outside [0, cap={cap}] "
+                         f"(min={N.min()}, max={N.max()})", where)
+    live = np.arange(cap)[None, :] < N[:, None]
+    tr, tc = bounds
+    for name, A, bound in (("row", R, tr), ("col", C, tc)):
+        if A is None:
+            continue
+        if (A[live] == SENTINEL).any():
+            raise AuditError(f"{where}: SENTINEL {name} inside live region",
+                             where)
+        bad = A[live]
+        if bad.size and (int(bad.min()) < 0 or int(bad.max()) >= bound):
+            raise AuditError(
+                f"{where}: {name} index out of bounds [0, {bound}) "
+                f"(min={bad.min()}, max={bad.max()})", where)
+        if (A[~live] != SENTINEL).any():
+            raise AuditError(
+                f"{where}: non-canonical padding ({name} != SENTINEL "
+                "beyond nnz)", where)
+    if lvl < FULL:
+        return
+    if np.issubdtype(V.dtype, np.floating):
+        Vl = V.reshape(V.shape[0], cap, -1)
+        lv = live[:, :, None] & np.ones(Vl.shape[-1], bool)
+        if not np.isfinite(Vl[lv]).all():
+            raise AuditError(f"{where}: non-finite value in live region",
+                             where)
+    keys = _keys(R, C, bounds, order)
+    if order in ("row", "col"):
+        d = np.diff(keys, axis=-1)
+        both_live = live[:, 1:] & live[:, :-1]
+        if (d[both_live] <= 0).any():
+            raise AuditError(
+                f"{where}: order='{order}' violated (keys not strictly "
+                "increasing — unsorted or duplicate (row, col))", where)
+    elif C is None:
+        # vectors carry no order tag; still reject duplicate indices
+        ks = np.sort(np.where(live, keys, np.iinfo(np.int64).max), axis=-1)
+        dup = (np.diff(ks, axis=-1) == 0) & (ks[:, :-1]
+                                             != np.iinfo(np.int64).max)
+        if dup.any():
+            raise AuditError(f"{where}: duplicate sparse-vector index "
+                             "within a piece", where)
+
+
+def audit_obj(obj, where: str, min_level: int = BOUNDARY):
+    """Validate a distributed container's invariants at the current level."""
+    lvl = level()
+    if lvl < min_level:
+        return
+    _audit_views(*_views(obj), where, lvl)
+
+
+# back-compat aliases for the three container families
+audit_spmat = audit_obj
+audit_spvec = audit_obj
+
+
+# --------------------------------------------------------------------------
+# checksums + communication bracketing
+# --------------------------------------------------------------------------
+
+def checksum_obj(obj) -> int:
+    """CRC32 over (nnz, live packed keys, live values) — stored order."""
+    R, C, V, N, bounds, order = _views(obj)
+    cap = R.shape[-1]
+    live = np.arange(cap)[None, :] < N[:, None]
+    keys = _keys(R, C, bounds, order)
+    crc = zlib.crc32(np.ascontiguousarray(N, np.int64).tobytes())
+    crc = zlib.crc32(np.ascontiguousarray(keys[live]).tobytes(), crc)
+    Vl = V.reshape(V.shape[0], cap, -1)
+    lv = live[:, :, None] & np.ones(Vl.shape[-1], bool)
+    crc = zlib.crc32(np.ascontiguousarray(Vl[lv]).tobytes(), crc)
+    return crc
+
+
+def guard_exchange(site: str, obj):
+    """Bracket one simulated communication stage.
+
+    checksum(pre) → apply any armed fault (the simulated in-flight
+    corruption — jax arrays are immutable, so corrupting the operand at the
+    boundary IS the wire model) → checksum(post); mismatch raises
+    :class:`AuditError`. At audit level off the fault passes through
+    undetected (the documented trade); with nothing armed and auditing off
+    this is two boolean reads.
+    """
+    from . import faults
+    f_on = faults.enabled()
+    lvl = level()
+    if not f_on and lvl < BOUNDARY:
+        return obj
+    pre = checksum_obj(obj) if lvl >= BOUNDARY else None
+    if f_on:
+        obj = faults.corrupt_obj(site, obj)
+    if pre is not None:
+        post = checksum_obj(obj)
+        if post != pre:
+            raise AuditError(
+                f"{site}: packed-key/value checksum mismatch across "
+                f"exchange ({pre:#010x} -> {post:#010x})", site)
+    return obj

@@ -1,0 +1,356 @@
+"""Deterministic fault injection for the distributed sparse stack.
+
+Long-running combinatorial workloads (HipMCL over days, standing PageRank
+answers) see silent data corruption, partial failures and stragglers as
+routine events — and a fault story is only credible if every failure mode
+can be *provoked on demand, deterministically*. This module is the provoker:
+a registry of named **fault sites** threaded through the stack's host-level
+boundaries (the points where tiles would cross the network, where plans read
+overflow flags, where checkpoints and matrix files hit disk), each of which
+consults the registry and — when an armed fault's activation window matches
+— perturbs the data flowing through it.
+
+Design rules:
+
+  * **Deterministic.** Every fault carries a seed; corruption draws from
+    ``numpy.random.default_rng`` keyed on (fault seed, global seed, site
+    name). The same ``REPRO_FAULTS``/``REPRO_FAULT_SEED`` produce the same
+    corruption bit-for-bit — CI pins them (the chaos-smoke job).
+  * **Zero overhead when disarmed.** ``enabled()`` is one module-global
+    boolean read; every hook checks it first.
+  * **Host-boundary semantics.** jax arrays are immutable and collectives
+    run inside traced programs, so "corruption in flight" is modeled by
+    corrupting the operand at the host-level call boundary *before* the
+    traced collective consumes it — observationally identical to the wire
+    flipping bits. Sites with ``at=N`` count *activations* (host calls).
+    The one trace-time site (``merge.kv_ok``) instead fires on every traced
+    call while armed — documented on :func:`trace_fault`.
+  * **No repro imports at module scope.** Core modules import this module;
+    anything from ``repro.core`` is imported lazily inside functions.
+
+Spec grammar (env ``REPRO_FAULTS`` or :func:`inject`)::
+
+    site:kind[:key=val[,key=val...]][;site2:kind2...]
+
+    e.g.  REPRO_FAULTS="spgemm2d.comm_a:nan:at=2,seed=7;loop.crash:crash"
+
+Kinds: ``nan`` ``corrupt_val`` ``corrupt_idx`` ``drop`` ``dup`` ``flip``
+``truncate`` ``corrupt_bytes`` ``crash`` ``delay``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import time
+import zlib
+
+import numpy as np
+
+# Matches core.coo.SENTINEL (int32 max) — duplicated here so this module
+# stays importable before repro.core exists (core modules import us).
+SENTINEL = 2**31 - 1
+
+# Every named fault site in the stack, with the boundary it models.
+# tests/test_faults.py asserts its chaos matrix covers ALL of these.
+KNOWN_SITES = {
+    "dist.assemble": "host COO -> DistSpMat tile assembly",
+    "spgemm2d.comm_a": "2D SUMMA: A entering the rotation/allgather",
+    "spgemm2d.comm_b": "2D SUMMA: B entering the rotation/allgather",
+    "spgemm3d.comm_a": "3D CA SpGEMM: A entering the per-layer multiply",
+    "spgemm3d.comm_b": "3D CA SpGEMM: B entering the per-layer multiply",
+    "spmspv.comm_x": "SpMSpV: frontier x entering the 'row' all-gather",
+    "merge.kv_ok": "merge engine: kv-tree overflow flag (trace-time)",
+    "plan.spgemm.ok": "planner: SpGEMM ok flags read on the host",
+    "plan.spmspv.ok": "planner: SpMSpV ok flags read on the host",
+    "checkpoint.leaf": "checkpoint leaf file bytes on disk",
+    "io.mm_body": "MatrixMarket body byte stream during read",
+    "io.bin_body": "binary-format body byte stream after write",
+    "loop.crash": "iterative app: hard crash at iteration start",
+    "loop.delay": "iterative app: straggler delay inside an iteration",
+}
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by a ``crash`` fault — models a process dying mid-run."""
+
+
+@dataclasses.dataclass
+class Fault:
+    site: str
+    kind: str
+    at: int = 1          # fire on the at-th .. (at+count-1)-th activation
+    count: int = 1
+    seed: int = 0
+    amount: float = 0.25  # fraction of entries / seconds of delay
+    hits: int = 0        # activations seen (mutable bookkeeping)
+    fired: int = 0       # activations that actually fired
+
+
+_FAULTS: list[Fault] = []
+_ENABLED = False         # fast-path flag, kept in sync with _FAULTS
+_ENV_LOADED = False
+
+
+def _parse_spec(spec: str) -> list[Fault]:
+    out = []
+    for part in spec.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        bits = part.split(":")
+        if len(bits) < 2:
+            raise ValueError(f"bad fault spec {part!r} (want site:kind[:k=v])")
+        site, kind = bits[0], bits[1]
+        kw = {}
+        if len(bits) > 2:
+            for kv in bits[2].split(","):
+                k, _, v = kv.partition("=")
+                kw[k] = float(v) if k == "amount" else int(v)
+        out.append(Fault(site, kind, **kw))
+    return out
+
+
+def _ensure_env():
+    global _ENV_LOADED, _ENABLED
+    if _ENV_LOADED:
+        return
+    _ENV_LOADED = True
+    spec = os.environ.get("REPRO_FAULTS", "")
+    if spec:
+        _FAULTS.extend(_parse_spec(spec))
+        _ENABLED = bool(_FAULTS)
+
+
+def global_seed() -> int:
+    return int(os.environ.get("REPRO_FAULT_SEED", "0"))
+
+
+def enabled() -> bool:
+    """One-boolean fast path; hooks bail here when nothing is armed."""
+    if not _ENV_LOADED:
+        _ensure_env()
+    return _ENABLED
+
+
+def active() -> list[Fault]:
+    _ensure_env()
+    return list(_FAULTS)
+
+
+def reset_counters():
+    for f in _FAULTS:
+        f.hits = f.fired = 0
+
+
+@contextlib.contextmanager
+def inject(*specs: str):
+    """Arm faults for a scope: ``with inject("spgemm2d.comm_a:nan"): ...``.
+
+    Counters of the injected faults start at zero and the previous registry
+    is restored (with its counters) on exit.
+    """
+    global _ENABLED
+    _ensure_env()
+    added = []
+    for s in specs:
+        added.extend(_parse_spec(s))
+    _FAULTS.extend(added)
+    _ENABLED = bool(_FAULTS)
+    try:
+        yield added
+    finally:
+        for f in added:
+            _FAULTS.remove(f)
+        _ENABLED = bool(_FAULTS)
+
+
+def fire(site: str) -> Fault | None:
+    """Count one activation of ``site``; return the fault if it fires now."""
+    if not enabled():
+        return None
+    for f in _FAULTS:
+        if f.site == site:
+            f.hits += 1
+            if f.at <= f.hits < f.at + f.count:
+                f.fired += 1
+                return f
+    return None
+
+
+def trace_fault(site: str) -> Fault | None:
+    """Armed-fault lookup WITHOUT activation counting.
+
+    For sites inside traced (jit/shard_map) code: tracing happens once per
+    compilation, not once per execution, so counting activations there would
+    be meaningless. A trace-time fault applies to *every* call while armed —
+    use :func:`inject` scopes (or count-free env specs) to bound it.
+    """
+    if not enabled():
+        return None
+    for f in _FAULTS:
+        if f.site == site:
+            f.fired += 1
+            return f
+    return None
+
+
+def _rng(f: Fault) -> np.random.Generator:
+    return np.random.default_rng(
+        (int(f.seed) << 16) ^ global_seed() ^ zlib.crc32(f.site.encode()))
+
+
+# --------------------------------------------------------------------------
+# corruption helpers (host-level, numpy in / jax out)
+# --------------------------------------------------------------------------
+
+def _corrupt_tiles(f: Fault, row, col, val, nnz, has_col: bool):
+    """Apply ``f`` to one tile of a capacity-padded tile family.
+
+    Arrays are (..., cap) numpy copies; returns them mutated. ``row`` (and
+    ``col`` when present) use SENTINEL padding; ``nnz`` counts live slots.
+    """
+    cap = row.shape[-1]
+    R = row.reshape(-1, cap)
+    C = col.reshape(-1, cap) if has_col else None
+    V = val.reshape((-1, cap) + val.shape[row.ndim:])
+    N = nnz.reshape(-1)
+    rng = _rng(f)
+    livable = np.nonzero(N > 0)[0]
+    if livable.size == 0:
+        return row, col, val, nnz
+    t = int(rng.choice(livable))
+    n = int(N[t])
+    k = max(1, min(n, int(round(f.amount * n))))
+    idxs = rng.choice(n, size=k, replace=False)
+    if f.kind == "nan":
+        if np.issubdtype(V.dtype, np.floating):
+            V[t, idxs] = np.nan
+        else:
+            V[t, idxs] = np.iinfo(V.dtype).max
+    elif f.kind == "corrupt_val":
+        V[t, idxs] = V[t, idxs] * 1000 + 7
+    elif f.kind == "corrupt_idx":
+        # out of tile bounds but not the padding sentinel
+        R[t, idxs] = 2**30 + np.arange(k, dtype=R.dtype)
+    elif f.kind == "drop":
+        # silently lose k entries: compact the live prefix and shrink nnz —
+        # only a checksum (or a result oracle) can see this one
+        keep = np.ones(cap, bool)
+        keep[idxs] = False
+        keep[n:] = False
+        m = int(keep.sum())
+        for A, pad in ((R, SENTINEL), (C, SENTINEL), (V, 0)):
+            if A is None:
+                continue
+            live = A[t][keep]
+            A[t][:m] = live
+            A[t][m:] = pad
+        N[t] = m
+    elif f.kind == "dup":
+        if n < cap:   # need slack to duplicate into; else corrupt instead
+            src = int(idxs[0])
+            R[t, n] = R[t, src]
+            if C is not None:
+                C[t, n] = C[t, src]
+            V[t, n] = V[t, src]
+            N[t] = n + 1
+        else:
+            V[t, idxs] = V[t, idxs] * 1000 + 7
+    else:
+        raise ValueError(f"fault kind {f.kind!r} cannot corrupt tiles")
+    return row, col, val, nnz
+
+
+def corrupt_spmat(site: str, m):
+    """Fault hook for DistSpMat / DistSpMat3D operands at a comm boundary."""
+    f = fire(site)
+    if f is None:
+        return m
+    import jax.numpy as jnp
+    row = np.array(m.row)
+    col = np.array(m.col)
+    val = np.array(m.val)
+    nnz = np.array(m.nnz)
+    row, col, val, nnz = _corrupt_tiles(f, row, col, val, nnz, has_col=True)
+    return dataclasses.replace(m, row=jnp.asarray(row), col=jnp.asarray(col),
+                               val=jnp.asarray(val), nnz=jnp.asarray(nnz))
+
+
+def corrupt_spvec(site: str, v):
+    """Fault hook for DistSpVec operands at a comm boundary."""
+    f = fire(site)
+    if f is None:
+        return v
+    import jax.numpy as jnp
+    idx = np.array(v.idx)
+    val = np.array(v.val)
+    nnz = np.array(v.nnz)
+    idx, _, val, nnz = _corrupt_tiles(f, idx, None, val, nnz, has_col=False)
+    return dataclasses.replace(v, idx=jnp.asarray(idx), val=jnp.asarray(val),
+                               nnz=jnp.asarray(nnz))
+
+
+def corrupt_obj(site: str, obj):
+    """Dispatch on the distributed container's fields (duck-typed)."""
+    return corrupt_spvec(site, obj) if hasattr(obj, "idx") \
+        else corrupt_spmat(site, obj)
+
+
+def flip_ok(site: str, ok):
+    """Flip a planner overflow flag to all-False (models a lying kernel)."""
+    f = fire(site)
+    if f is None:
+        return ok
+    import jax.numpy as jnp
+    return jnp.zeros_like(jnp.asarray(ok))
+
+
+def corrupt_bytes(site: str, data: bytes) -> bytes:
+    """Fault hook for an in-memory byte stream (I/O read paths)."""
+    f = fire(site)
+    if f is None or not data:
+        return data
+    rng = _rng(f)
+    if f.kind == "truncate":
+        keep = max(1, int(len(data) * (1.0 - f.amount)))
+        return data[:keep]
+    buf = bytearray(data)
+    k = max(1, int(len(buf) * min(f.amount, 1.0) * 0.05))
+    for pos in rng.integers(0, len(buf), size=k):
+        buf[pos] = int(rng.integers(0, 256))
+    return bytes(buf)
+
+
+def corrupt_file(site: str, path: str):
+    """Fault hook for a file just written to disk (checkpoint leaves)."""
+    f = fire(site)
+    if f is None:
+        return
+    size = os.path.getsize(path)
+    if f.kind == "truncate":
+        with open(path, "r+b") as fh:
+            fh.truncate(max(1, int(size * (1.0 - f.amount))))
+        return
+    rng = _rng(f)
+    with open(path, "r+b") as fh:
+        # flip bytes in the back half: past any .npy header, into the data
+        for pos in rng.integers(size // 2, size, size=max(4, size // 256)):
+            fh.seek(int(pos))
+            b = fh.read(1)
+            fh.seek(int(pos))
+            fh.write(bytes([b[0] ^ 0xFF]))
+
+
+def maybe_crash(site: str):
+    """Raise InjectedCrash when a ``crash`` fault fires at ``site``."""
+    f = fire(site)
+    if f is not None:
+        raise InjectedCrash(f"injected crash at {site} (hit {f.hits})")
+
+
+def maybe_delay(site: str):
+    """Sleep ``amount`` seconds when a ``delay`` fault fires (straggler)."""
+    f = fire(site)
+    if f is not None:
+        time.sleep(f.amount)

@@ -1,0 +1,212 @@
+"""Graceful degradation + checkpointed iteration for long-running workloads.
+
+Two recovery mechanisms, both loud (one warning per decision, the decision
+recorded where the caller can see it):
+
+**The degradation ladder.** When a planned multiply keeps failing — audit
+checksum mismatches that survive plain retries, or overflow flags still
+false at the worst-case capacity ceiling (the "ok flags disagree with the
+symbolic bound" state that previously just raised) — the planner walks a
+documented ladder of progressively more conservative pipeline configurations
+instead of dying (DESIGN.md §8):
+
+    1. ``postfilter``           fused masked multiply  -> unmasked multiply
+                                + explicit post-filter (mask semantics kept,
+                                pushdown win given up)
+    2. ``sort-merge``           deferred/incremental merge engine -> the
+                                seed concat-and-sort merge
+    3. ``legacy-dedup``         packed-key dedup -> the seed two-key sort
+                                (process-global: ``merge.force_legacy_dedup``)
+    4. ``pure-jax-segreduce``   accelerator segmented-reduce kernel -> the
+                                pure-JAX paths (process-global uninstall)
+
+Each rung taken is appended to the plan's ``degraded`` tuple. Rungs 3/4
+flip process-global switches — once a kernel is implicated, every later
+call avoids it until :func:`reset_degradation`.
+
+**CheckpointedLoop.** Iterative apps (PageRank / HipMCL / FastSV) wrap their
+iteration in this class to get per-iteration checkpoint/resume in the
+``train/checkpoint.py`` atomic-dir format: state is a flat ``{name: array}``
+dict, saved after each iteration, restored (CRC-verified, falling back past
+corrupted steps) on restart. Because each app's loop body is a pure function
+of its state dict, a crashed-and-resumed run replays the remaining
+iterations bitwise-identically to an uninterrupted one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import numpy as np
+
+from . import faults
+
+LADDER = ("postfilter", "sort-merge", "legacy-dedup", "pure-jax-segreduce")
+
+# Rungs meaningful per planned-op family (SpMSpV has no merge-engine path).
+_RUNGS = {"spgemm": LADDER,
+          "spmspv": ("postfilter", "pure-jax-segreduce")}
+
+
+def next_rung(plan, mask, kind: str = "spgemm") -> str | None:
+    """First untried, applicable ladder rung for ``plan`` (None = exhausted)."""
+    taken = set(getattr(plan, "degraded", ()))
+    for rung in _RUNGS[kind]:
+        if rung in taken:
+            continue
+        if rung == "postfilter":
+            if mask is not None:
+                return rung
+        elif rung == "sort-merge":
+            if getattr(plan, "merge", "sort") != "sort":
+                return rung
+        elif rung == "legacy-dedup":
+            from ..core import merge
+            if not merge.legacy_dedup_forced():
+                return rung
+        elif rung == "pure-jax-segreduce":
+            from ..core import semiring
+            if semiring._SEGREDUCE_BACKEND is not None \
+                    or not semiring._SEGREDUCE_RESOLVED:
+                return rung
+    return None
+
+
+def apply_rung(rung: str, plan):
+    """Take ``rung``: warn once, flip switches, record it on the plan.
+
+    The ``postfilter`` rung only records the decision — the caller owns the
+    mask and must drop it (and post-apply it) itself, re-planning capacities
+    for the unmasked output.
+    """
+    warnings.warn(
+        f"robust: degrading pipeline -> {rung!r} "
+        f"(after {getattr(plan, 'attempts', '?')} attempts; "
+        f"ladder so far: {getattr(plan, 'degraded', ())})",
+        RuntimeWarning, stacklevel=3)
+    kw = dict(degraded=tuple(getattr(plan, "degraded", ())) + (rung,))
+    if rung == "sort-merge" and hasattr(plan, "merge"):
+        kw["merge"] = "sort"
+    elif rung == "legacy-dedup":
+        from ..core import merge
+        merge.force_legacy_dedup(True)
+        if hasattr(plan, "merge"):
+            kw["merge"] = "sort"    # the legacy dedup lives on the sort path
+    elif rung == "pure-jax-segreduce":
+        from ..core import semiring
+        semiring.register_segment_reduce_backend(None)
+    return dataclasses.replace(plan, **{k: v for k, v in kw.items()
+                                        if hasattr(plan, k)})
+
+
+def reset_degradation():
+    """Undo the process-global rungs (tests; a fresh job starts clean)."""
+    from ..core import merge, semiring
+    merge.force_legacy_dedup(False)
+    semiring._SEGREDUCE_BACKEND = None
+    semiring._SEGREDUCE_RESOLVED = False
+
+
+# --------------------------------------------------------------------------
+# explicit post-filters (the semantics the `postfilter` rung falls back to)
+# --------------------------------------------------------------------------
+
+def postfilter_2d(c, mask, sr, *, mesh):
+    """Apply MaskSpec semantics to an already-computed unmasked C."""
+    from ..core.mask import apply_val_pred, filter_tile, local_mask
+    from ..core.matops import mat_apply_local, mat_ewise_local
+    if mask.mat is not None:
+        def fn(tc, tm):
+            lm = local_mask(tm, pred=mask.pred, complement=mask.complement)
+            return filter_tile(tc, lm, sr.add.identity)
+        c = mat_ewise_local(c, mask.mat, fn, mesh=mesh)
+    if mask.val_pred is not None:
+        c = mat_apply_local(
+            c, lambda t: apply_val_pred(t, mask.val_pred, sr.add.identity),
+            mesh=mesh)
+    return c
+
+
+def postfilter_spvec(y, mask):
+    """Apply a vector MaskSpec to an already-computed unmasked SpMSpV y."""
+    import jax.numpy as jnp
+    from ..core.matops import spvec_mask
+    pred = mask.pred
+    if mask.complement:
+        return spvec_mask(y, mask.vec,
+                          lambda xv, vv: ~jnp.asarray(pred(vv)))
+    return spvec_mask(y, mask.vec, lambda xv, vv: jnp.asarray(pred(vv)))
+
+
+# --------------------------------------------------------------------------
+# checkpointed iteration
+# --------------------------------------------------------------------------
+
+_DONE_KEY = "__loop_done__"
+
+
+class CheckpointedLoop:
+    """Per-iteration checkpoint/resume for iterative graph apps.
+
+    ``state`` is a FLAT dict of arrays (so restore needs no shape template —
+    iterates like HipMCL's change capacity between iterations) and ``body``
+    is ``body(it, state) -> (state, done)``, pure given ``state``. With
+    ``ckpt_dir=None`` the loop runs bare (identical iteration sequence, no
+    I/O) — the bitwise-resume contract is exactly that a crashed run,
+    restarted with the same ``ckpt_dir``, finishes with the same state as
+    the bare run.
+
+    Fault sites: ``loop.crash`` (InjectedCrash at iteration start, before
+    any state mutation) and ``loop.delay`` (straggler sleep; flagged through
+    the optional ``launch.elastic.StepWatchdog``).
+    """
+
+    def __init__(self, ckpt_dir: str | None = None, *, every: int = 1,
+                 keep: int = 3, watchdog=None):
+        self.ckpt_dir = ckpt_dir
+        self.every = max(int(every), 1)
+        self.keep = keep
+        self.watchdog = watchdog
+
+    def resume(self, state: dict):
+        """(start_iteration, state): restored when a checkpoint exists."""
+        if not self.ckpt_dir:
+            return 0, state
+        from ..train.checkpoint import restore_flat
+        try:
+            restored, step = restore_flat(self.ckpt_dir)
+        except FileNotFoundError:
+            return 0, state
+        done = bool(np.asarray(restored.pop(_DONE_KEY, False)))
+        return (-1 if done else step + 1), restored
+
+    def _save(self, it: int, state: dict, done: bool):
+        from ..train.checkpoint import save_checkpoint
+        tree = dict(state)
+        tree[_DONE_KEY] = np.asarray(done)
+        save_checkpoint(self.ckpt_dir, it, tree, keep=self.keep)
+
+    def run(self, state: dict, body, max_iters: int) -> dict:
+        start, state = self.resume(state)
+        if start < 0:                       # checkpointed run already done
+            return state
+        wd = self.watchdog
+        for it in range(start, max_iters):
+            faults.maybe_crash("loop.crash")
+            if wd is not None:
+                wd.start()
+            faults.maybe_delay("loop.delay")
+            state, done = body(it, state)
+            if wd is not None:
+                dt = wd.stop()
+                if wd.is_straggling(dt):
+                    warnings.warn(
+                        f"robust: iteration {it} straggling "
+                        f"({dt:.3f}s > budget {wd.budget():.3f}s)",
+                        RuntimeWarning, stacklevel=2)
+            if self.ckpt_dir and (done or (it + 1) % self.every == 0
+                                  or it + 1 == max_iters):
+                self._save(it, state, bool(done))
+            if done:
+                break
+        return state

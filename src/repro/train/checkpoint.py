@@ -2,29 +2,45 @@
 
 Format: one directory per step —
     step_000123.tmp/…  →  atomic rename →  step_000123/
-      manifest.json    tree structure, shapes, dtypes, step
+      manifest.json    tree structure, shapes, dtypes, per-leaf CRC32, step
       NNN.npy          one file per leaf, FULL (unsharded) logical array
 
 Because leaves are stored logically (not per-shard), restore can target ANY
 mesh: pass `specs`+`mesh` and each leaf is device_put straight into its new
 sharding — this is the elastic-scaling path (tested in
-tests/test_checkpoint.py by saving from one mesh shape and restoring onto
+tests/test_train.py::TestCheckpoint and end-to-end by
+tests/elastic_scenario.py, which saves from one mesh shape and restores onto
 another). Production note (DESIGN.md §8): at 1000+ nodes the same manifest
 format fronts a per-shard ocdbt-style store; the API here is the contract.
 
 Durability: writes go to a ``.tmp`` directory, fsync'd, then renamed —
 a crash mid-save never corrupts the latest complete checkpoint. ``keep``
 old checkpoints are retained (default 3).
+
+Integrity (robust/): every leaf's bytes are CRC32-summed into the manifest
+at save time and verified on restore. A corrupted, truncated, or missing
+leaf raises :class:`CheckpointError` naming the leaf — and when the caller
+asked for the *latest* step (``step=None``), restore falls back to the
+previous retained checkpoint with a loud warning instead of dying on the
+newest one (the ``checkpoint.leaf`` fault site exercises this).
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
+import warnings
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from ..robust import faults as _faults
+
+
+class CheckpointError(ValueError):
+    """A checkpoint leaf failed integrity verification on restore."""
 
 
 def _flatten_with_paths(tree):
@@ -33,6 +49,10 @@ def _flatten_with_paths(tree):
                       for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
     return paths, leaves
+
+
+def _leaf_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3):
@@ -48,10 +68,13 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3):
     for i, (p, leaf) in enumerate(zip(paths, leaves)):
         arr = np.asarray(leaf)          # gathers across devices
         fname = f"{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
+        fpath = os.path.join(tmp, fname)
+        np.save(fpath, arr)
+        _faults.corrupt_file("checkpoint.leaf", fpath)
         manifest["leaves"].append(dict(path=p, file=fname,
                                        shape=list(arr.shape),
-                                       dtype=str(arr.dtype)))
+                                       dtype=str(arr.dtype),
+                                       crc32=_leaf_crc(arr)))
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
@@ -83,14 +106,64 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _load_leaf(step_dir: str, entry: dict) -> np.ndarray:
+    """Read + verify one manifest leaf; CheckpointError names the leaf."""
+    fpath = os.path.join(step_dir, entry["file"])
+    where = f"{fpath} (leaf {entry['path']!r})"
+    if not os.path.exists(fpath):
+        raise CheckpointError(f"missing checkpoint leaf {where}")
+    try:
+        arr = np.load(fpath)
+    except Exception as err:
+        raise CheckpointError(
+            f"unreadable checkpoint leaf {where}: {err}") from err
+    if tuple(arr.shape) != tuple(entry["shape"]) \
+            or str(arr.dtype) != entry["dtype"]:
+        raise CheckpointError(
+            f"checkpoint leaf {where} shape/dtype drifted from manifest: "
+            f"{arr.shape}/{arr.dtype} vs {entry['shape']}/{entry['dtype']}")
+    if "crc32" in entry and _leaf_crc(arr) != entry["crc32"]:
+        raise CheckpointError(
+            f"checkpoint leaf {where} CRC32 mismatch "
+            f"({_leaf_crc(arr):#010x} != manifest {entry['crc32']:#010x})")
+    return arr
+
+
+def _candidate_steps(ckpt_dir: str, step: int | None):
+    """Requested step only, or all retained steps newest-first."""
+    if step is not None:
+        return [step]
+    steps = sorted(all_steps(ckpt_dir), reverse=True)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    return steps
+
+
 def restore_checkpoint(ckpt_dir: str, like: Any, *, step: int | None = None,
                        mesh=None, specs: Any = None):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs). With mesh+specs, leaves are placed sharded —
-    onto ANY mesh shape (elastic restart)."""
-    step = step if step is not None else latest_step(ckpt_dir)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    onto ANY mesh shape (elastic restart).
+
+    Every leaf is CRC32-verified against the manifest; a failed leaf raises
+    :class:`CheckpointError` — unless ``step=None``, where restore falls
+    back to the previous retained checkpoint (loudly)."""
+    last_err: Exception | None = None
+    for s in _candidate_steps(ckpt_dir, step):
+        try:
+            return _restore_one(ckpt_dir, s, like, mesh, specs), s
+        except CheckpointError as err:
+            if step is not None:
+                raise
+            warnings.warn(
+                f"checkpoint step {s} failed verification ({err}); "
+                "falling back to the previous retained checkpoint",
+                RuntimeWarning, stacklevel=2)
+            last_err = err
+    raise last_err
+
+
+def _restore_one(ckpt_dir: str, step: int, like, mesh, specs):
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
@@ -100,8 +173,7 @@ def restore_checkpoint(ckpt_dir: str, like: Any, *, step: int | None = None,
         [None] * len(like_leaves)
     out_leaves = []
     for p, leaf, spec in zip(paths, like_leaves, spec_leaves):
-        e = by_path[p]
-        arr = np.load(os.path.join(d, e["file"]))
+        arr = _load_leaf(d, by_path[p])
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch at {p}: {arr.shape} vs "
                              f"{leaf.shape}")
@@ -109,4 +181,30 @@ def restore_checkpoint(ckpt_dir: str, like: Any, *, step: int | None = None,
             arr = jax.device_put(arr, jax.NamedSharding(mesh, spec))
         out_leaves.append(arr)
     treedef = jax.tree.structure(like)
-    return jax.tree.unflatten(treedef, out_leaves), step
+    return jax.tree.unflatten(treedef, out_leaves)
+
+
+def restore_flat(ckpt_dir: str, step: int | None = None):
+    """Manifest-driven restore: ``({leaf_path: np.ndarray}, step)``.
+
+    No ``like`` template — shapes come from the manifest, so callers whose
+    state shapes change between steps (HipMCL's per-iteration re-planned
+    capacities) can still resume. Same CRC verification and latest-step
+    fallback as :func:`restore_checkpoint`."""
+    last_err: Exception | None = None
+    for s in _candidate_steps(ckpt_dir, step):
+        d = os.path.join(ckpt_dir, f"step_{s:08d}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            return {e["path"]: _load_leaf(d, e)
+                    for e in manifest["leaves"]}, s
+        except CheckpointError as err:
+            if step is not None:
+                raise
+            warnings.warn(
+                f"checkpoint step {s} failed verification ({err}); "
+                "falling back to the previous retained checkpoint",
+                RuntimeWarning, stacklevel=2)
+            last_err = err
+    raise last_err

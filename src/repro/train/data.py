@@ -40,13 +40,20 @@ class SyntheticLM:
 
 
 class Prefetcher:
-    """Background-thread prefetch (double buffering the host→device copy)."""
+    """Background-thread prefetch (double buffering the host→device copy).
+
+    Failure contract: an exception in ``source.batch_at`` is captured on the
+    worker thread and re-raised in ``next()`` (after any already-prefetched
+    batches are consumed) — never a silently dead worker with ``next()``
+    blocking forever. ``close()`` joins the thread.
+    """
 
     def __init__(self, source, start_step: int = 0, depth: int = 2):
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self.step = start_step
         self.source = source
         self._stop = threading.Event()
+        self._exc: BaseException | None = None
         self.t = threading.Thread(target=self._work, daemon=True)
         self.t.start()
 
@@ -54,16 +61,41 @@ class Prefetcher:
         s = self.step
         while not self._stop.is_set():
             try:
-                self.q.put(self.source.batch_at(s), timeout=1.0)
-                s += 1
-            except queue.Full:
-                continue
+                batch = self.source.batch_at(s)
+            except BaseException as err:      # noqa: BLE001 — relayed, not
+                self._exc = err               # swallowed: next() re-raises
+                return
+            while not self._stop.is_set():
+                try:
+                    self.q.put(batch, timeout=1.0)
+                    s += 1
+                    break
+                except queue.Full:
+                    continue
 
     def next(self) -> dict:
-        return self.q.get()
+        # poll so a worker death surfaces instead of blocking forever;
+        # batches queued before the failure are still delivered in order
+        while True:
+            try:
+                return self.q.get(timeout=0.1)
+            except queue.Empty:
+                if self._exc is not None:
+                    raise self._exc
+                if not self.t.is_alive():
+                    raise RuntimeError(
+                        "Prefetcher worker thread died without queuing a "
+                        "batch or recording an exception")
 
     def close(self):
         self._stop.set()
+        # drain so a put()-blocked worker sees the stop flag promptly
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        self.t.join(timeout=5.0)
 
 
 def make_batch_specs(cfg, shape: dict, plan=None):

@@ -161,3 +161,26 @@ class TestData:
         np.testing.assert_array_equal(b["tokens"],
                                       src.batch_at(3)["tokens"])
         pf.close()
+
+    def test_prefetcher_relays_worker_exception(self):
+        """A source that dies must surface its exception in next() — never
+        a silently dead worker with next() blocking forever (and batches
+        queued before the failure are still delivered in order)."""
+        from repro.train.data import Prefetcher
+
+        class Dies:
+            def __init__(self):
+                self.good = SyntheticLM(256, 16, 2, seed=7)
+
+            def batch_at(self, step):
+                if step >= 2:
+                    raise OSError("shard server went away")
+                return self.good.batch_at(step)
+
+        pf = Prefetcher(Dies(), depth=1)
+        got = [pf.next(), pf.next()]          # the two pre-failure batches
+        np.testing.assert_array_equal(got[0]["tokens"],
+                                      Dies().good.batch_at(0)["tokens"])
+        with pytest.raises(OSError, match="shard server went away"):
+            pf.next()
+        pf.close()
