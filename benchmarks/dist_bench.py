@@ -1,8 +1,13 @@
-"""Distributed SpGEMM benchmarks (Figs 5/6/7) — run as a SUBPROCESS with
-forced host devices (the parent benchmark keeps 1 device).
+"""Distributed SpGEMM benchmarks (Figs 5/6/7 + §4.8) — run as a SUBPROCESS
+with forced host devices (the parent benchmark keeps 1 device).
 
     python benchmarks/dist_bench.py evolution   # Fig 5/6: 2D vs 3D vs merge
     python benchmarks/dist_bench.py scaling     # Fig 7: collective bytes vs p
+    python benchmarks/dist_bench.py sweep       # §4.8: overlap x schedule x
+                                                # compression + weak/strong
+
+``evolution`` needs a 4x4 grid; on fewer than 16 forced devices it emits
+nothing (exit 0) so the REPRO_DEVICES=8 CI mesh can still run the sweep.
 """
 import os
 import sys
@@ -23,13 +28,17 @@ from repro.io import rmat_coo                                  # noqa: E402
 from repro.launch.roofline import collective_bytes             # noqa: E402
 
 
-def _time(fn, *args, reps=2):
+def _time(fn, *args, reps=5):
+    # best-of-reps: forced host devices share one core, so scheduler noise
+    # swings single measurements by tens of percent — min is the robust
+    # estimator of the true cost
     jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def evolution(scale=11):
@@ -112,8 +121,95 @@ def scaling():
     return rows
 
 
+def _assert_ok(ok, what):
+    if not bool(jnp.all(ok)):
+        raise RuntimeError(f"benchmark overflow in {what} — caps too small, "
+                           "timings would be garbage")
+
+
+def sweep():
+    """§4.8 trajectory: overlap{on,off} x schedule{rotate,alltoall,bcast,
+    hybrid} x compress{off,int8} on the CI q=2 mesh, plus weak/strong
+    scaling rows. The ``dist_overlap_speedup_*`` ratios are the gated
+    BENCH_dist.json keys."""
+    q = 2
+    shape, r, c, v = rmat_coo(10, 8, seed=4)
+    mesh = make_grid(q, q)
+    A = DistSpMat.from_global_coo(shape, r, c, v, (q, q), mesh=mesh,
+                                  random_permute=True)
+    pc, oc = 1 << 17, 1 << 16
+    scheds = {"rotate": "rotate", "alltoall": "alltoall", "bcast": "bcast",
+              "hybrid": ("gather",) * (q - 1) + ("bcast",)}
+    rows = []
+    times = {}
+    for sname, sched in scheds.items():
+        for overlap in (True, False):
+            fn = jax.jit(lambda a, b, s=sched, o=overlap: spgemm_2d(
+                a, b, ARITHMETIC, mesh=mesh, prod_cap=pc, out_cap=oc,
+                merge="deferred", schedule=s, overlap=o))
+            _assert_ok(fn(A, A)[1], f"{sname} overlap={overlap}")
+            t = _time(fn, A, A)
+            times[(sname, overlap)] = t
+            coll = collective_bytes(fn.lower(A, A).compile().as_text())
+            tag = "overlap" if overlap else "serial"
+            rows.append((f"dist2d_{sname}_{tag}", t,
+                         f"collbytes={coll['total']:.0f}"))
+    for sname in scheds:
+        rows.append((f"dist_overlap_speedup_{sname}",
+                     times[(sname, False)] / max(times[(sname, True)], 1e-9),
+                     "serial/overlap (double-buffer win)"))
+    # int8-compressed rotation exchange (overlap on/off), vs the float wire
+    cbytes = {}
+    for compress in (None, "int8"):
+        for overlap in ((True, False) if compress else (True,)):
+            fn = jax.jit(lambda a, b, o=overlap, cp=compress: spgemm_2d(
+                a, b, ARITHMETIC, mesh=mesh, prod_cap=pc, out_cap=oc,
+                merge="deferred", schedule="rotate", overlap=o, compress=cp))
+            _assert_ok(fn(A, A)[1], f"compress={compress}")
+            coll = collective_bytes(fn.lower(A, A).compile().as_text())
+            cbytes[compress] = coll["total"]
+            if compress:
+                tag = "overlap" if overlap else "serial"
+                rows.append((f"dist2d_rotate_{tag}_int8", _time(fn, A, A),
+                             f"collbytes={coll['total']:.0f}"))
+    rows.append(("dist_compress_bytes_ratio",
+                 cbytes[None] / max(cbytes["int8"], 1e-9),
+                 "float-wire/int8-wire collective bytes (rotate)"))
+    # strong scaling: fixed problem, p up; weak scaling: problem grows with p
+    strong_qs = [1, 2] + ([4] if N_DEV >= 16 else [])
+    for bq in strong_qs:
+        t, cb = _grid_point(bq, scale=10)
+        rows.append((f"dist_strong_s10_p{bq * bq}", t, f"collbytes={cb:.0f}"))
+    for bq, scale in [(1, 9), (2, 11)] + ([(4, 13)] if N_DEV >= 16 else []):
+        t, cb = _grid_point(bq, scale=scale)
+        rows.append((f"dist_weak_s{scale}_p{bq * bq}", t,
+                     f"collbytes={cb:.0f}"))
+    return rows
+
+
+def _grid_point(q, *, scale, pc=1 << 20, oc=1 << 18):
+    # generous caps: a q=1 grid concentrates the whole expansion on one
+    # device; these points exist for the scaling trajectory, not peak rate
+    shape, r, c, v = rmat_coo(scale, 8, seed=5)
+    mesh = make_grid(q, q)
+    A = DistSpMat.from_global_coo(shape, r, c, v, (q, q), mesh=mesh,
+                                  random_permute=True)
+    fn = jax.jit(lambda a, b: spgemm_2d(a, b, ARITHMETIC, mesh=mesh,
+                                        prod_cap=pc, out_cap=oc,
+                                        merge="deferred"))
+    _assert_ok(fn(A, A)[1], f"grid q={q} scale={scale}")
+    t = _time(fn, A, A)
+    coll = collective_bytes(fn.lower(A, A).compile().as_text())
+    return t, coll["total"]
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "evolution"
-    rows = evolution() if which == "evolution" else scaling()
+    if which == "evolution" and N_DEV < 16:
+        print(f"# evolution needs 16 devices, have {N_DEV} — skipped",
+              file=sys.stderr)
+        sys.exit(0)
+    fns = {"evolution": evolution, "scaling": scaling, "sweep": sweep}
+    rows = fns[which]()
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -4,12 +4,17 @@ Prints ``name,us_per_call,derived`` CSV. Distributed benchmarks run in
 subprocesses with forced host devices; everything else runs on the single
 real device. ``--full`` widens the sweeps.
 
-``--json`` additionally writes ``BENCH_spgemm.json`` (repo root): the
-spgemm benchmark rows plus every ``*_speedup*`` ratio, so future PRs can
-diff perf trajectories (quick-mode invocation: the verify flow runs
-``python -m benchmarks.run --only spgemm_local --json`` from the repo
-root — the ``-m`` form is required so the ``benchmarks`` package
-resolves).
+``--json`` additionally writes the perf-trajectory artifacts (repo root):
+``BENCH_spgemm.json`` from the spgemm_local rows and ``BENCH_dist.json``
+from the distributed rows (the §4.8 sweep + evolution + scaling), each as
+benchmark rows plus every ``*_speedup*``/``*_ratio`` key, so future PRs
+can diff perf trajectories. Subsets that would silently omit an artifact
+are rejected: with ``--only``, ``--json`` requires both ``spgemm_local``
+and ``dist`` in the subset, and a failed dist subprocess is a hard error
+rather than a skipped artifact. CI's bench-smoke job runs
+``REPRO_DEVICES=8 python -m benchmarks.run --only spgemm_local,dist
+--json`` from the repo root — the ``-m`` form is required so the
+``benchmarks`` package resolves.
 
   spmspv_sweep    Fig 3   SpMSpV/SpMV variant selection vs sparsity
   spgemm_local    §4.1    hash↔dense vs heap↔ESC crossover
@@ -39,13 +44,13 @@ def emit(rows):
 
 
 def write_bench_json(rows, path=None):
-    """BENCH_spgemm.json trajectory artifact: µs per benchmark + ratios."""
+    """Trajectory artifact: µs per benchmark + every speedup/ratio key."""
     path = path or os.path.join(ROOT, "BENCH_spgemm.json")
     doc = {
         "benchmarks": {name: {"us": round(us, 1), "derived": derived}
                        for name, us, derived in rows},
         "speedups": {name: round(us, 3) for name, us, _ in rows
-                     if "speedup" in name},
+                     if "speedup" in name or "ratio" in name},
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
@@ -53,18 +58,34 @@ def write_bench_json(rows, path=None):
     return doc
 
 
-def run_dist(which: str, devices: int = 16):
+def run_dist(which: str, devices: int | None = None):
+    """Run one dist_bench mode in a forced-device subprocess.
+
+    Returns the parsed ``(name, us, derived)`` rows, or None on failure
+    (the caller decides whether that is fatal — it is under ``--json``).
+    """
+    if devices is None:
+        devices = int(os.environ.get("REPRO_DEVICES", "16"))
     env = dict(os.environ, REPRO_DEVICES=str(devices))
     env.pop("XLA_FLAGS", None)
     script = os.path.join(os.path.dirname(__file__), "dist_bench.py")
     proc = subprocess.run([sys.executable, script, which],
                           capture_output=True, text=True, env=env,
-                          timeout=1200)
+                          timeout=3600)
     if proc.returncode != 0:
         print(f"dist_bench_{which},0.0,FAILED", flush=True)
         sys.stderr.write(proc.stderr[-2000:])
-        return
-    print(proc.stdout.strip())
+        return None
+    out = proc.stdout.strip()
+    if out:
+        print(out)
+    rows = []
+    for line in out.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        name, us, derived = line.split(",", 2)
+        rows.append((name, float(us), derived))
+    return rows
 
 
 def kernels_bench(quick=True):
@@ -108,11 +129,13 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
-    if args.json and only is not None and "spgemm_local" not in only:
-        # the artifact is built from the spgemm_local rows; silently writing
+    if args.json and only is not None and not {"spgemm_local",
+                                               "dist"} <= only:
+        # each artifact is built from its section's rows; silently writing
         # nothing (the old behavior) made perf-trajectory runs vacuous
         ap.error("--json writes BENCH_spgemm.json from the spgemm_local "
-                 "rows; include spgemm_local in --only (or drop --only)")
+                 "rows and BENCH_dist.json from the dist rows; include "
+                 "both in --only (or drop --only)")
 
     def want(name):
         return only is None or name in only
@@ -127,8 +150,15 @@ def main() -> None:
         if args.json:
             write_bench_json(rows)
     if want("dist"):
-        run_dist("evolution")
-        run_dist("scaling")
+        parts = [run_dist("sweep"), run_dist("evolution"),
+                 run_dist("scaling")]
+        if args.json:
+            if any(p is None for p in parts):
+                raise SystemExit(
+                    "dist benchmark subprocess failed — refusing to write "
+                    "a partial BENCH_dist.json")
+            write_bench_json([r for p in parts for r in p],
+                             path=os.path.join(ROOT, "BENCH_dist.json"))
     if want("apps"):
         from benchmarks import apps_bench
         emit(apps_bench.run(quick=quick))

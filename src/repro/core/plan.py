@@ -56,6 +56,14 @@ MEM_BUDGET_ENTRIES = 1 << 22
 # entries never amortize (DESIGN.md §4.4/§4.6).
 SORT_MERGE_ENTRIES = 1 << 13
 
+# Hybrid-schedule rule of thumb (DESIGN.md §4.6/§4.8, after McFarland et
+# al. arXiv 2504.06408): when the per-stage wire volumes are skewed
+# (coefficient of variation of the stage operand sizes above this), batch
+# the sparsest stages into one fused eager exchange (the all-to-all leg)
+# and stream the dense stages as per-stage broadcasts. Uniform stages gain
+# nothing from splitting the sweep, so they keep the rotate schedule.
+HYBRID_STAGE_SKEW = 0.5
+
 # Mask pushdown rule of thumb (DESIGN.md §4.6/§4.7): fused masking beats
 # unmasked-then-filter when the mask admits at most this fraction of the
 # unmasked output estimate — below it the mask-sized out/stage caps drop a
@@ -92,6 +100,11 @@ class SpGEMMPlan:
     est_out: float         # estimated peak per-device nnz(C)
     attempts: int = 1      # how many numeric attempts the retry loop used
     degraded: tuple = ()   # ladder rungs taken (robust/recover.py), in order
+    # exchange schedule (§4.8): None derives from the variant; 'rotate' |
+    # 'alltoall' | 'bcast' | a length-q tuple of 'bcast'|'gather' entries
+    schedule: object = None
+    overlap: bool = True   # double-buffered stage loops (False = bulk-sync)
+    compress: Optional[str] = None   # 'int8' wire compression of values
 
     def at_ceiling(self) -> bool:
         return (self.prod_cap >= self.prod_ceiling
@@ -115,13 +128,23 @@ def plan_spgemm(a: DistSpMat, b: DistSpMat | None = None, *,
                 safety: float = 4.0,
                 prod_cap: int | None = None, out_cap: int | None = None,
                 variant: str | None = None, merge: str | None = None,
-                mask=None,
+                mask=None, schedule=None, overlap: bool = True,
+                compress: str | None = None,
                 mem_budget: int = MEM_BUDGET_ENTRIES) -> SpGEMMPlan:
     """Size and configure a 2D SpGEMM from tile nnz statistics.
 
     The estimate assumes entries spread uniformly over tile columns (the
     random-permutation load-balance story of §2.3); skewed inputs are caught
     by the overflow flags and absorbed by the safety factor + retry growth.
+
+    ``schedule`` (§4.8): when neither variant nor schedule is forced, the
+    planner inspects the per-stage wire volumes (stage k moves A(·,k) and
+    B(k,·)); skewed stages (cv > ``HYBRID_STAGE_SKEW``) pick a hybrid
+    per-stage tuple — the sparsest stages batched into one fused eager
+    exchange ('gather'), the rest per-stage broadcasts ('bcast') — while
+    uniform stages keep the variant-derived whole-sweep schedule.
+    ``overlap`` and ``compress`` ride on the plan so the retry loop and the
+    degradation ladder ('serial-schedule' rung) can flip them.
 
     ``mask`` (a ``mask.MaskSpec``): a pattern mask bounds the per-tile
     output EXACTLY — a structural mask's C tile holds at most its mask
@@ -184,6 +207,11 @@ def plan_spgemm(a: DistSpMat, b: DistSpMat | None = None, *,
     #     needs real cap slack to skip (prod_cap ≥ 4·expected products) and
     #     its tree work (≈ out_cap·log2 q rank-placement slots) must stay
     #     well under the q·prod_cap sort volume it avoids.
+    if variant is None and schedule is not None:
+        # explicit schedule, free variant: keep the pair consistent
+        variant = ("rotation" if schedule == "rotate" else
+                   "allgather" if schedule == "alltoall" else "hybrid")
+    auto_sched = variant is None and schedule is None
     if variant is None:
         variant = "allgather" if q * (a.cap + b.cap) <= mem_budget \
             else "rotation"
@@ -197,8 +225,23 @@ def plan_spgemm(a: DistSpMat, b: DistSpMat | None = None, *,
             merge = "deferred"
         else:
             merge = "sort"
+    if schedule is None and auto_sched and variant == "rotation" and q >= 2:
+        # per-stage schedule pick (§4.8): stage k moves A(·,k)/B(k,·); when
+        # the stage volumes are skewed, eagerly batch the sparsest stages
+        # (one fused exchange — the all-to-all leg) and broadcast the rest
+        # per stage. The gather count is memory-bounded: each batched stage
+        # keeps one extra operand pair live.
+        sk = na.max(axis=0) + nb_.max(axis=1)
+        cv = float(sk.std() / max(sk.mean(), 1.0))
+        g = int(min(q - 1, mem_budget // max(a.cap + b.cap, 1)))
+        if cv > HYBRID_STAGE_SKEW and g >= 1:
+            sparsest = set(int(k) for k in np.argsort(sk)[:g])
+            schedule = tuple("gather" if k in sparsest else "bcast"
+                             for k in range(q))
+            variant = "hybrid"
     return SpGEMMPlan(p_cap, o_cap, variant, merge, p_ceil, o_ceil,
-                      stage_est, out_est)
+                      stage_est, out_est, schedule=schedule, overlap=overlap,
+                      compress=compress)
 
 
 def spgemm(a: DistSpMat, b: DistSpMat | None = None,
@@ -206,7 +249,8 @@ def spgemm(a: DistSpMat, b: DistSpMat | None = None,
            plan: SpGEMMPlan | None = None,
            prod_cap: int | None = None, out_cap: int | None = None,
            variant: str | None = None, merge: str | None = None,
-           mask=None,
+           mask=None, schedule=None, overlap: bool = True,
+           compress: str | None = None,
            safety: float = 4.0, max_attempts: int = 6, growth: int = 4):
     """Planned C = A ⊕.⊗ B (optionally C⟨M⟩ via ``mask``). Returns
     (C, plan-with-attempt-count).
@@ -230,7 +274,8 @@ def spgemm(a: DistSpMat, b: DistSpMat | None = None,
     b = a if b is None else b
     p = plan if plan is not None else plan_spgemm(
         a, b, safety=safety, prod_cap=prod_cap, out_cap=out_cap,
-        variant=variant, merge=merge, mask=mask)
+        variant=variant, merge=merge, mask=mask, schedule=schedule,
+        overlap=overlap, compress=compress)
     cur_mask = mask
     post_mask = None       # set when the 'postfilter' rung strips the mask
     audit_fails = 0
@@ -238,7 +283,9 @@ def spgemm(a: DistSpMat, b: DistSpMat | None = None,
         try:
             c, ok = _spgemm_2d(a, b, sr, mesh=mesh, prod_cap=p.prod_cap,
                                out_cap=p.out_cap, variant=p.variant,
-                               merge=p.merge, mask=cur_mask)
+                               merge=p.merge, mask=cur_mask,
+                               schedule=p.schedule, overlap=p.overlap,
+                               compress=p.compress)
         except _audit.AuditError as err:
             audit_fails += 1
             if audit_fails <= MAX_AUDIT_RETRIES:

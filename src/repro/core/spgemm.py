@@ -1,23 +1,49 @@
 """Distributed SpGEMM: 2D SUMMA (rotation + all-gather) and 3D CA (paper §3.2).
 
-2D (paper's Sparse SUMMA, hardware-adapted — DESIGN.md §4.1):
-  - variant='rotation' (default): Cannon-style systolic schedule. One
-    multi-axis collective-permute performs the initial skew, then q stages of
-    neighbor rotation (A left along 'col', B up along 'row') each followed by
-    a local O(flops) expansion. Communication volume per device equals the
-    paper's Table 1 bandwidth term O(nnz(A+B)/√p); the primitive is the
-    torus-native permute instead of an MPI broadcast.
-  - variant='allgather': the literal broadcast formulation — each device
-    all-gathers its process row of A and process column of B, then runs the
-    q local multiplies. Same volume, √q-deeper buffers (the memory/latency
-    tradeoff the paper describes for 2D SUMMA at scale).
+2D (paper's Sparse SUMMA, hardware-adapted — DESIGN.md §4.1, §4.8):
+  - schedule='rotate' (variant='rotation', default): Cannon-style systolic
+    schedule. One multi-axis collective-permute performs the initial skew,
+    then q stages of neighbor rotation (A left along 'col', B up along 'row')
+    each followed by a local O(flops) expansion. Communication volume per
+    device equals the paper's Table 1 bandwidth term O(nnz(A+B)/√p); the
+    primitive is the torus-native permute instead of an MPI broadcast.
+  - schedule='alltoall' (variant='allgather'): the literal broadcast
+    formulation — each device all-gathers its process row of A and process
+    column of B in one shot, then runs the q local multiplies. Same volume,
+    √q-deeper buffers (the memory/latency tradeoff the paper describes for
+    2D SUMMA at scale).
+  - schedule='bcast' / per-stage tuple (variant='hybrid'): SUMMA stage order
+    k=s with a masked-psum broadcast per stage — O(1) extra buffering like
+    'rotate' but addressable per stage, so a tuple schedule can batch its
+    sparsest stages into ONE fused eager exchange ('gather' entries, the
+    all-to-all leg of McFarland et al. arXiv 2504.06408) while streaming the
+    dense stages as per-stage broadcasts.
+
+Overlap (§4.8): by default (overlap=True) every stage loop is double
+buffered — stage s+1's ppermute/psum is issued before stage s's local
+expand+mask-filter+merge, so XLA can run the collective under the compute.
+overlap=False reproduces the bulk-synchronous MPI model by pinning each
+stage's merge outputs before the next exchange's inputs with an
+optimization_barrier. Both orders run identical per-stage math, so their
+results are bitwise equal (the overlap toggle is a pure scheduling choice).
+
+Compressed exchanges (compress='int8'): value payloads are quantized to
+per-tile symmetric int8 at the host boundary and travel the wire compressed
+(the scale rides along in the fused tree permute); each stage dequantizes
+just before expansion. Error feedback across spgemm_2d_batched batches
+re-injects the quantization residual of A (re-sent every batch) so the
+error does not accumulate. Requires floating values and an additive
+identity of 0 (padding must survive the round trip). The int8 payload is
+bracketed by the 'dist.compressed_exchange' audit/fault site.
 
 3D CA (paper Fig 2): inputs on a (L, q, q) grid, A column-sliced and B
 row-sliced across layers. Each layer runs an independent 2D multiply over a
 contraction dim shrunk by L (broadcast/rotation volume shrinks by the
 paper's √c factor on the smaller communicator), then one inter-layer
 all-to-all scatters partial C column sub-blocks and a local semiring merge
-forms C distributed like A.
+forms C distributed like A. With overlap=True the three field exchanges are
+fused into one tree-level all_to_all issued as soon as the radix placement
+finishes; overlap=False barriers the placement and exchanges per field.
 
 Merging (paper §5 "binary merge scheme", DESIGN.md §4.4): every stage
 product buffer is compacted (per-stage packed-key dedup to
@@ -37,12 +63,13 @@ min(prod_cap, out_cap) slots) and then combined through the merge engine:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..dist.compression import quantize_payload
 from ..robust import audit as _audit
 from .compat import pvary, shard_map
 from .coo import COO, SENTINEL
@@ -55,29 +82,86 @@ from .semiring import ARITHMETIC, Semiring
 
 Array = jax.Array
 
+# variant (planner-facing algorithm family) -> whole-sweep schedule
+_VARIANT_SCHEDULE = {"rotation": "rotate", "allgather": "alltoall",
+                     "hybrid": "bcast"}
 
+
+def _schedule_from(variant, schedule, q):
+    """Resolve the (variant, schedule) pair to an executable schedule.
+
+    A schedule is either 'rotate' (whole-sweep Cannon), 'alltoall' (one-shot
+    gather of all stage operands), 'bcast' (per-stage masked-psum broadcast,
+    SUMMA stage order), or a length-q tuple of 'bcast'|'gather' picking the
+    exchange per stage ('gather' stages are batched into one fused eager
+    exchange). Cannon's rotation cannot be mixed per stage: after the skew,
+    device (i,j) multiplies k=(i+j+s) mod q at stage s — a different k per
+    device — while a broadcast stage needs the same k everywhere, so
+    'rotate' is only available as a whole sweep (DESIGN.md §4.8).
+    """
+    if schedule is None:
+        try:
+            return _VARIANT_SCHEDULE[variant]
+        except KeyError:
+            raise ValueError(f"unknown SpGEMM variant {variant!r}") from None
+    if isinstance(schedule, (tuple, list)):
+        sched = tuple(schedule)
+        if len(sched) != q:
+            raise ValueError(
+                f"per-stage schedule has {len(sched)} entries for q={q}")
+        bad = [s for s in sched if s not in ("bcast", "gather")]
+        if bad:
+            raise ValueError(f"per-stage schedule entries must be "
+                             f"'bcast'|'gather', got {bad!r}")
+        return sched
+    if schedule not in ("rotate", "alltoall", "bcast"):
+        raise ValueError(f"unknown schedule {schedule!r}")
+    return schedule
+
+
+@lru_cache(maxsize=None)
 def _cannon_perms(q, skew_a=True):
-    """(src, dst) pairs on a row-major q×q grid for the initial skew."""
+    """(src, dst) pairs on a row-major q×q grid for the initial skew.
+
+    Memoized on q: the table is loop-invariant and trace-time constant, so
+    it is built once per grid size instead of once per traced permute.
+    """
     if skew_a:  # A(i, j) -> A(i, (j - i) mod q)
-        return [(r * q + c, r * q + (c - r) % q)
-                for r in range(q) for c in range(q)]
+        return tuple((r * q + c, r * q + (c - r) % q)
+                     for r in range(q) for c in range(q))
     # B(i, j) -> B((i - j) mod q, j)
-    return [(r * q + c, ((r - c) % q) * q + c)
-            for r in range(q) for c in range(q)]
+    return tuple((r * q + c, ((r - c) % q) * q + c)
+                 for r in range(q) for c in range(q))
 
 
+@lru_cache(maxsize=None)
 def _shift_perm(q, axis_len, left=True):
-    return [(s, (s - 1) % axis_len) if left else (s, (s + 1) % axis_len)
-            for s in range(axis_len)]
+    return tuple((s, (s - 1) % axis_len) if left else (s, (s + 1) % axis_len)
+                 for s in range(axis_len))
 
 
-def _tile_permute(tile: COO, axes, perm) -> COO:
-    r = jax.lax.ppermute(tile.row, axes, perm)
-    c = jax.lax.ppermute(tile.col, axes, perm)
-    v = jax.lax.ppermute(tile.val, axes, perm)
-    n = jax.lax.ppermute(tile.nnz, axes, perm)
-    # whole tiles move between devices; each one keeps its internal order
-    return COO(r, c, v, n, tile.shape, tile.order)
+def _tile_permute(tile: COO, axes, perm, scale=None):
+    """Move whole tiles between devices in ONE tree-level ppermute.
+
+    All four fields (and the int8 dequantization scale, when the payload is
+    compressed) travel in a single collective-permute instead of four — one
+    launch, one fusion boundary. Each tile keeps its internal order.
+    Returns (tile, scale); scale is None when no scale was passed.
+    """
+    fields = (tile.row, tile.col, tile.val, tile.nnz)
+    if scale is None:
+        r, c, v, n = jax.lax.ppermute(fields, axes, perm)
+        return COO(r, c, v, n, tile.shape, tile.order), None
+    r, c, v, n, s = jax.lax.ppermute(fields + (scale,), axes, perm)
+    return COO(r, c, v, n, tile.shape, tile.order), s
+
+
+def _deq(tile: COO, scale):
+    """Dequantize an int8-compressed tile (identity when scale is None)."""
+    if scale is None:
+        return tile
+    return COO(tile.row, tile.col, tile.val.astype(scale.dtype) * scale,
+               tile.nnz, tile.shape, tile.order)
 
 
 def _merge_products(rows, cols, vals, nvalid, shape, sr, out_cap,
@@ -93,9 +177,84 @@ def _merge_products(rows, cols, vals, nvalid, shape, sr, out_cap,
     return d.with_cap(out_cap, sr.add.identity), ok
 
 
+def _rotate_sweep(q, overlap, rotate, step, state0, at0, as0, bt0, bs0):
+    """Run the q Cannon stages, double-buffered or bulk-synchronous.
+
+    overlap=True: each scan iteration issues the NEXT rotation before the
+    current stage's expand+merge, so XLA can run the permute under the
+    compute; the epilogue stage multiplies the last operands without
+    rotating them (the dead final rotation of the serial formulation is
+    dropped — 1/q of the rotation volume).
+    overlap=False: q iterations, each pinning its merge outputs before the
+    next rotation's inputs with an optimization_barrier (the MPI
+    bulk-synchronous model). Stage order and per-stage math are identical
+    either way, so results are bitwise equal.
+
+    ``step(state, at, bt) -> (state, y_or_None)`` consumes dequantized
+    tiles; ``rotate`` moves the (possibly compressed) wire payload.
+    """
+    def deq_step(state, at, as_, bt, bs_):
+        return step(state, _deq(at, as_), _deq(bt, bs_))
+
+    if overlap:
+        def body(carry, _):
+            at, as_, bt, bs_, state = carry
+            nxt = rotate(at, as_, bt, bs_)   # issued before this stage's work
+            state, y = deq_step(state, at, as_, bt, bs_)
+            return nxt + (state,), y
+
+        (at, as_, bt, bs_, state), ys = jax.lax.scan(
+            body, (at0, as0, bt0, bs0, state0), None, length=q - 1)
+        state, y = deq_step(state, at, as_, bt, bs_)   # epilogue: no rotate
+        if y is not None:
+            ys = jax.tree.map(lambda s, e: jnp.concatenate([s, e[None]]),
+                              ys, y)
+        return state, ys
+
+    def body(carry, _):
+        at, as_, bt, bs_, state = carry
+        state, y = deq_step(state, at, as_, bt, bs_)
+        # bulk-synchronous: the next rotation may not launch until this
+        # stage's merge has completed
+        (state, y), (at, as_, bt, bs_) = jax.lax.optimization_barrier(
+            ((state, y), (at, as_, bt, bs_)))
+        return rotate(at, as_, bt, bs_) + (state,), y
+
+    (_, _, _, _, state), ys = jax.lax.scan(
+        body, (at0, as0, bt0, bs0, state0), None, length=q)
+    return state, ys
+
+
+def _staged_tail(outs, shape, sr, merge, prod_cap, stage_cap, out_cap,
+                 mask, val_pred):
+    """Merge q per-stage _expand outputs (shared by alltoall/bcast paths)."""
+    ident = sr.add.identity
+    ok = jnp.all(jnp.stack([o[4] for o in outs]))
+    if merge == "sort":
+        # seed path: concatenate q full padded buffers, sort once —
+        # masked products are dropped per stage, before the concat
+        if mask is not None:
+            outs = [(*filter_products(r, c_, v, shape, mask, ident), n, o)
+                    for (r, c_, v, n, o) in outs]
+        rows = jnp.concatenate([o[0] for o in outs])
+        cols = jnp.concatenate([o[1] for o in outs])
+        vals = jnp.concatenate([o[2] for o in outs])
+        total = sum(o[3] for o in outs)
+        c, ok2 = _merge_products(rows, cols, vals, total, shape, sr,
+                                 out_cap, val_pred=val_pred)
+        return c, ok & ok2
+    # merge engine: mask-filter + compact each stage, then fold the q
+    # sorted streams
+    c, okm = merge_stage_products(
+        [(r, c_, v, jnp.minimum(n, prod_cap)) for (r, c_, v, n, _) in outs],
+        shape, sr.add, stage_cap, out_cap, mask=mask)
+    return apply_val_pred(c, val_pred, ident), ok & okm
+
+
 def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
-                     variant, merge, mask: LocalMask | None = None,
-                     val_pred=None):
+                     schedule, merge, overlap=True,
+                     mask: LocalMask | None = None, val_pred=None,
+                     a_scale=None, b_scale=None):
     """Body run per device under shard_map for the 2D algorithm.
 
     The engine paths ('deferred'/'incremental') run at the kv level:
@@ -109,6 +268,10 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
     bounded by the masked nnz(C), so mask-sized out/stage caps stay sound
     (still guarded pre-clamp by the ok flags). ``val_pred`` drops merged
     entries by output value in the final compaction.
+
+    ``a_scale``/``b_scale`` are per-tile int8 dequantization scales (scalar
+    per device) when the value payload is compressed; tiles dequantize just
+    before expansion, AFTER every collective, so the wire stays int8.
     """
     shape = (a_tile.shape[0], b_tile.shape[1])
     stage_cap = min(prod_cap, out_cap)
@@ -116,46 +279,92 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
     if key_dtype(shape) is None:
         merge = "sort"        # unpackable tile: the engine needs x64 keys
 
-    if variant == "allgather":
+    if schedule == "alltoall":
         # gather my process row of A and process column of B (the broadcast
         # formulation; all stages' operands live simultaneously)
         ar = jax.tree.map(lambda x: jax.lax.all_gather(x, "col"), a_tile)
         bc = jax.tree.map(lambda x: jax.lax.all_gather(x, "row"), b_tile)
+        asg = None if a_scale is None else jax.lax.all_gather(a_scale, "col")
+        bsg = None if b_scale is None else jax.lax.all_gather(b_scale, "row")
+        if not overlap:
+            # bulk-synchronous: every stage's operands must land before any
+            # local multiply starts
+            ar, bc, asg, bsg = jax.lax.optimization_barrier(
+                (ar, bc, asg, bsg))
 
         def stage(s):
             at = COO(ar.row[s], ar.col[s], ar.val[s], ar.nnz[s],
                      a_tile.shape, a_tile.order)
             bt = COO(bc.row[s], bc.col[s], bc.val[s], bc.nnz[s],
                      b_tile.shape, b_tile.order)
+            at = _deq(at, None if asg is None else asg[s])
+            bt = _deq(bt, None if bsg is None else bsg[s])
             return _expand(at, bt, sr, prod_cap)
 
         outs = [stage(s) for s in range(q)]
-        ok = jnp.all(jnp.stack([o[4] for o in outs]))
-        if merge == "sort":
-            # seed path: concatenate q full padded buffers, sort once —
-            # masked products are dropped per stage, before the concat
-            if mask is not None:
-                outs = [(*filter_products(r, c_, v, shape, mask, ident),
-                         n, o) for (r, c_, v, n, o) in outs]
-            rows = jnp.concatenate([o[0] for o in outs])
-            cols = jnp.concatenate([o[1] for o in outs])
-            vals = jnp.concatenate([o[2] for o in outs])
-            total = sum(o[3] for o in outs)
-            c, ok2 = _merge_products(rows, cols, vals, total, shape, sr,
-                                     out_cap, val_pred=val_pred)
-            return c, ok & ok2
-        # merge engine: mask-filter + compact each stage, then fold the q
-        # sorted streams
-        c, okm = merge_stage_products(
-            [(r, c_, v, jnp.minimum(n, prod_cap)) for (r, c_, v, n, _)
-             in outs],
-            shape, sr.add, stage_cap, out_cap, mask=mask)
-        return apply_val_pred(c, val_pred, ident), ok & okm
+        return _staged_tail(outs, shape, sr, merge, prod_cap, stage_cap,
+                            out_cap, mask, val_pred)
+
+    if schedule != "rotate":
+        # hybrid SUMMA stage order k=s: per-stage masked-psum broadcast
+        # ('bcast'), with the tuple schedule's 'gather' stages batched into
+        # ONE fused eager exchange up front (the all-to-all leg)
+        sched = (schedule if isinstance(schedule, tuple)
+                 else ("bcast",) * q)
+        ri = jax.lax.axis_index("row")
+        ci = jax.lax.axis_index("col")
+        apay = (a_tile, a_scale)
+        bpay = (b_tile, b_scale)
+
+        def sel(pay, pos, s):
+            # only stage s's owner contributes; the psum reduces the zeros
+            # away and delivers the owner's tile to the whole axis
+            return jax.tree.map(
+                lambda x: jnp.where(pos == s, x, jnp.zeros_like(x)), pay)
+
+        gs = [s for s in range(q) if sched[s] == "gather"]
+        eag_a = eag_b = None
+        if gs:
+            eag_a = jax.lax.psum(jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[sel(apay, ci, s) for s in gs]), "col")
+            eag_b = jax.lax.psum(jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[sel(bpay, ri, s) for s in gs]), "row")
+
+        def fetch(s):
+            if s in gs:
+                i = gs.index(s)
+                return (jax.tree.map(lambda x: x[i], eag_a),
+                        jax.tree.map(lambda x: x[i], eag_b))
+            return (jax.lax.psum(sel(apay, ci, s), "col"),
+                    jax.lax.psum(sel(bpay, ri, s), "row"))
+
+        outs = []
+        cur = fetch(0)
+        for s in range(q):
+            if overlap and s + 1 < q:
+                nxt = fetch(s + 1)      # issued before this stage's expand
+            (ap, asx), (bp, bsx) = cur
+            y = _expand(_deq(ap, asx), _deq(bp, bsx), sr, prod_cap)
+            if not overlap and s + 1 < q:
+                # bulk-synchronous: the next broadcast's source payload may
+                # not be read until this stage's expansion has completed
+                y, (apay, bpay) = jax.lax.optimization_barrier(
+                    (y, (apay, bpay)))
+                nxt = fetch(s + 1)
+            outs.append(y)
+            if s + 1 < q:
+                cur = nxt
+        return _staged_tail(outs, shape, sr, merge, prod_cap, stage_cap,
+                            out_cap, mask, val_pred)
 
     # rotation (Cannon)
     axes = ("row", "col")
-    a_skew = _tile_permute(a_tile, axes, _cannon_perms(q, skew_a=True))
-    b_skew = _tile_permute(b_tile, axes, _cannon_perms(q, skew_a=False))
+    a_rot, as_rot = _tile_permute(a_tile, axes, _cannon_perms(q, True),
+                                  a_scale)
+    b_rot, bs_rot = _tile_permute(b_tile, axes, _cannon_perms(q, False),
+                                  b_scale)
     if mask is not None:
         # loop-invariant closure of the scan bodies below: mark varying so
         # newer-jax manual-axes checks accept the device-local mask arrays
@@ -163,18 +372,24 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
                          None if mask.allow is None
                          else pvary(mask.allow, axes),
                          mask.complement, mask.order)
+    ok0 = pvary(jnp.bool_(True), axes)
+
+    def rotate(at, as_, bt, bs_):
+        at, as_ = _tile_permute(at, "col", _shift_perm(q, q, left=True), as_)
+        bt, bs_ = _tile_permute(bt, "row", _shift_perm(q, q, left=True), bs_)
+        return at, as_, bt, bs_
 
     if merge == "incremental":
-        kacc, vacc, nacc = kv_empty(shape, out_cap,
-                                    vals_dtype(sr, a_tile, b_tile), sr.add)
+        kacc, vacc, nacc = kv_empty(
+            shape, out_cap, vals_dtype(sr, a_tile, b_tile, a_scale, b_scale),
+            sr.add)
         # constants entering a shard_map scan carry must be marked varying
         # (newer jax; identity on 0.4.x — see compat.pvary)
-        kacc, vacc, nacc = (pvary(kacc, ("row", "col")),
-                            pvary(vacc, ("row", "col")),
-                            pvary(nacc, ("row", "col")))
+        kacc, vacc, nacc = (pvary(kacc, axes), pvary(vacc, axes),
+                            pvary(nacc, axes))
 
-        def body(carry, _):
-            at, bt, kacc, vacc, nacc, ok = carry
+        def step(state, at, bt):
+            kacc, vacc, nacc, ok = state
             r, c, v, n, okx = _expand(at, bt, sr, prod_cap)
             # mask-filter + compact the stage, then O(n) rank-placement
             # merge into the sorted kv accumulator — never re-sorted
@@ -183,66 +398,87 @@ def _local_spgemm_2d(a_tile: COO, b_tile: COO, sr, q, prod_cap, out_cap,
                 mask=mask)
             kacc, vacc, nacc, okm = kv_merge2(kacc, vacc, nacc, ks, vs, ns,
                                               sr.add, out_cap)
-            ok = ok & okx & okc & okm
-            at = _tile_permute(at, "col", _shift_perm(q, q, left=True))
-            bt = _tile_permute(bt, "row", _shift_perm(q, q, left=True))
-            return (at, bt, kacc, vacc, nacc, ok), None
+            return (kacc, vacc, nacc, ok & okx & okc & okm), None
 
-        ok0 = pvary(jnp.bool_(True), ("row", "col"))
-        (at, bt, kacc, vacc, nacc, ok), _ = jax.lax.scan(
-            body, (a_skew, b_skew, kacc, vacc, nacc, ok0), None, length=q)
+        state, _ = _rotate_sweep(q, overlap, rotate, step,
+                                 (kacc, vacc, nacc, ok0),
+                                 a_rot, as_rot, b_rot, bs_rot)
+        kacc, vacc, nacc, ok = state
         c = kv_to_coo(kacc, vacc, nacc, shape, sr.add, out_cap)
         return apply_val_pred(c, val_pred, ident), ok
 
     if merge == "sort":
         # seed path: collect q padded product buffers, concat, sort once
-        def body(carry, _):
-            at, bt = carry
+        def step(ok, at, bt):
             r, c, v, n, okx = _expand(at, bt, sr, prod_cap)
             if mask is not None:
                 r, c, v = filter_products(r, c, v, shape, mask, ident)
-            at = _tile_permute(at, "col", _shift_perm(q, q, left=True))
-            bt = _tile_permute(bt, "row", _shift_perm(q, q, left=True))
-            return (at, bt), (r, c, v, jnp.minimum(n, prod_cap), okx)
+            return ok & okx, (r, c, v)
 
-        (_, _), (rs, cs, vs, ns, oks) = jax.lax.scan(
-            body, (a_skew, b_skew), None, length=q)
+        ok, (rs, cs, vs) = _rotate_sweep(q, overlap, rotate, step, ok0,
+                                         a_rot, as_rot, b_rot, bs_rot)
         rows = rs.reshape(-1)
         cols = cs.reshape(-1)
         vals = vs.reshape((-1,) + vs.shape[2:])
         c, ok2 = _merge_products(rows, cols, vals, rows.shape[0], shape, sr,
                                  out_cap, val_pred=val_pred)
-        return c, jnp.all(oks) & ok2
+        return c, ok & ok2
 
     # deferred (merge tree): mask-filter + compact each stage inside the
     # scan, then fold the q sorted kv streams pairwise — no concat-and-sort
-    def body(carry, _):
-        at, bt = carry
+    def step(ok, at, bt):
         r, c, v, n, okx = _expand(at, bt, sr, prod_cap)
         ks, vs, ns, okc = kv_from_products(
             r, c, v, jnp.minimum(n, prod_cap), shape, sr.add, stage_cap,
             mask=mask)
-        at = _tile_permute(at, "col", _shift_perm(q, q, left=True))
-        bt = _tile_permute(bt, "row", _shift_perm(q, q, left=True))
-        return (at, bt), (ks, vs, ns, okx & okc)
+        return ok & okx & okc, (ks, vs, ns)
 
-    (_, _), (ks, vs, ns, oks) = jax.lax.scan(
-        body, (a_skew, b_skew), None, length=q)
+    ok, (ks, vs, ns) = _rotate_sweep(q, overlap, rotate, step, ok0,
+                                     a_rot, as_rot, b_rot, bs_rot)
     items = [(ks[s], vs[s], ns[s]) for s in range(q)]
     k, v, nn, okm = kv_tree(items, sr.add, out_cap)
     c = kv_to_coo(k, v, nn, shape, sr.add, out_cap)
-    return apply_val_pred(c, val_pred, ident), jnp.all(oks) & okm
+    return apply_val_pred(c, val_pred, ident), ok & okm
 
 
-def vals_dtype(sr, a_tile, b_tile):
-    return sr.out_dtype(a_tile.dtype, b_tile.dtype)
+def vals_dtype(sr, a_tile, b_tile, a_scale=None, b_scale=None):
+    # compressed tiles carry int8 on the wire; the scale keeps the
+    # original value dtype, which is what expansion produces after deq
+    ad = a_scale.dtype if a_scale is not None else a_tile.dtype
+    bd = b_scale.dtype if b_scale is not None else b_tile.dtype
+    return sr.out_dtype(ad, bd)
+
+
+def _compress_operand(mat, sr, site, resid=None):
+    """Quantize a DistSpMat's value payload to int8 at the host boundary.
+
+    The returned matrix carries int8 values (the wire payload — guarded by
+    the ``dist.compressed_exchange`` audit/fault site) plus a per-tile
+    scale array; ``new_resid`` is the quantization error for error
+    feedback (exactly val+resid − dequantized).
+    """
+    q8, scale, new_resid = quantize_payload(mat.val, mat.nnz, resid)
+    mat = dataclasses.replace(mat, val=q8)
+    mat = _audit.guard_exchange(site, mat)
+    return mat, scale, new_resid
 
 
 def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
               mesh: Mesh, prod_cap: int, out_cap: int,
               variant: str = "rotation", merge: str = "deferred",
-              mask: MaskSpec | None = None):
+              mask: MaskSpec | None = None, schedule=None,
+              overlap: bool = True, compress: str | None = None,
+              ef_resid=None):
     """C = A ⊕.⊗ B (optionally C⟨M⟩). Returns (DistSpMat, ok[pr,pc]).
+
+    ``schedule`` overrides the variant-derived exchange schedule: 'rotate',
+    'alltoall', 'bcast', or a length-q tuple of 'bcast'|'gather' (§4.8).
+    ``overlap`` toggles double-buffered (default) vs bulk-synchronous stage
+    loops; results are bitwise equal either way. ``compress='int8'``
+    quantizes the value payloads for the wire (floating values with an
+    additive identity of 0 only); passing ``ef_resid`` (a residual array
+    like ``a.val``, start with zeros) enables error feedback for A and
+    makes the return a 3-tuple (C, ok, new_resid).
 
     ``mask.mat`` must be tile-aligned with C (same grid, C's shape): the
     mask never communicates, and each device prunes its expanded products
@@ -250,12 +486,29 @@ def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
     """
     assert a.grid == b.grid and a.pr == a.pc, "2D SpGEMM needs a square grid"
     assert a.shape[1] == b.shape[0]
-    # operands are about to enter the rotation/allgather collectives: this
-    # is the wire boundary the audit checksums bracket (and the fault sites
+    q = a.pr
+    sched = _schedule_from(variant, schedule, q)
+    # operands are about to enter the exchange collectives: this is the
+    # wire boundary the audit checksums bracket (and the fault sites
     # corrupt) — see robust/audit.guard_exchange
     a = _audit.guard_exchange("spgemm2d.comm_a", a)
     b = _audit.guard_exchange("spgemm2d.comm_b", b)
-    q = a.pr
+    a_scale = b_scale = new_resid = None
+    if ef_resid is not None and compress is None:
+        raise ValueError("ef_resid is only meaningful with compress='int8'")
+    if compress is not None:
+        if compress != "int8":
+            raise ValueError(f"unknown compress mode {compress!r}")
+        if not (jnp.issubdtype(a.val.dtype, jnp.floating)
+                and jnp.issubdtype(b.val.dtype, jnp.floating)):
+            raise ValueError("compressed exchange needs floating values")
+        if sr.add.identity != 0.0:
+            raise ValueError(
+                "compressed exchange needs an additive identity of 0 "
+                "(padding must survive the int8 round trip)")
+        a, a_scale, new_resid = _compress_operand(
+            a, sr, "dist.compressed_exchange", ef_resid)
+        b, b_scale, _ = _compress_operand(b, sr, "dist.compressed_exchange")
     mm = mask.mat if mask is not None else None
     val_pred = mask.val_pred if mask is not None else None
     if mask is not None and (mask.mat3 is not None or mask.vec is not None):
@@ -264,12 +517,20 @@ def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
         assert mm.grid == a.grid and mm.shape == (a.shape[0], b.shape[1]), \
             "mask must be tile-aligned with C"
 
-    def body(at, bt, *mt):
-        lm = mask.local(mt[0].tile()) if mt else None
+    def body(at, bt, *extra):
+        i = 0
+        lm = None
+        if mm is not None:
+            lm = mask.local(extra[i].tile())
+            i += 1
+        asx = bsx = None
+        if a_scale is not None:
+            asx = extra[i].reshape(())
+            bsx = extra[i + 1].reshape(())
         c, ok = _local_spgemm_2d(
             at.tile(), bt.tile(),
-            sr, q, prod_cap, out_cap, variant, merge, mask=lm,
-            val_pred=val_pred)
+            sr, q, prod_cap, out_cap, sched, merge, overlap=overlap,
+            mask=lm, val_pred=val_pred, a_scale=asx, b_scale=bsx)
         return (c.row[None, None], c.col[None, None], c.val[None, None],
                 c.nnz[None, None], ok[None, None])
 
@@ -278,6 +539,9 @@ def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
     if mm is not None:
         in_specs = in_specs + (specs_of(mm),)
         args = args + (mm,)
+    if a_scale is not None:
+        in_specs = in_specs + (P("row", "col"), P("row", "col"))
+        args = args + (a_scale, b_scale)
     out_specs = (P("row", "col", None), P("row", "col", None),
                  P("row", "col", None), P("row", "col"), P("row", "col"))
     f = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
@@ -286,16 +550,25 @@ def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
     cmat = DistSpMat(row, col, val, nnz, (a.shape[0], b.shape[1]), a.grid,
                      order="row")
     _audit.audit_obj(cmat, "spgemm2d.out", min_level=_audit.FULL)
+    if ef_resid is not None:
+        return cmat, ok, new_resid
     return cmat, ok
 
 
 def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
               mesh: Mesh, prod_cap: int, out_cap: int,
               merge: str = "deferred", variant: str = "rotation",
-              mask: MaskSpec | None = None):
+              mask: MaskSpec | None = None, schedule=None,
+              overlap: bool = True):
     """Communication-avoiding SpGEMM on a (L, q, q) grid (paper Fig 2).
 
-    Returns (C3 [dist='csub'], ok[L,q,q]).
+    Returns (C3 [dist='csub'], ok[L,q,q]). ``schedule``/``overlap`` select
+    the per-layer 2D exchange schedule and double-buffering exactly as in
+    :func:`spgemm_2d`; ``overlap`` additionally fuses the inter-layer
+    all-to-all into one tree-level exchange (overlap=False barriers the
+    radix placement and exchanges the three fields separately — the
+    bulk-synchronous reference; both move identical bytes, results are
+    bitwise equal).
 
     ``mask.mat3`` must be C-distributed ('csub', same grid). Each layer
     all-gathers the mask's L column sub-pieces of its C tile along the
@@ -309,6 +582,7 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
     a3 = _audit.guard_exchange("spgemm3d.comm_a", a3)
     b3 = _audit.guard_exchange("spgemm3d.comm_b", b3)
     L, q = a3.L, a3.q
+    sched = _schedule_from(variant, schedule, q)
     tr_a, tc_a = a3.block_sizes()
     tr_b, tc_b = b3.block_sizes()
     assert tc_a == tr_b, (tc_a, tr_b)
@@ -355,8 +629,8 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
             lm = LocalMask(keys, allow, mask.complement, "row")
         # per-layer 2D multiply ('row'/'col' collectives are layer-local)
         c_part, ok = _local_spgemm_2d(a_tile, b_tile, sr, q,
-                                      prod_cap, prod_cap, variant, merge,
-                                      mask=lm)
+                                      prod_cap, prod_cap, sched, merge,
+                                      overlap=overlap, mask=lm)
         # ---- inter-layer all-to-all (Fig 2, right) --------------------
         # destination layer of an entry = its column sub-block
         dest = jnp.where(c_part.mask(), c_part.col // kbl, L)
@@ -385,10 +659,27 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
         buf_c = buf_c.at[slotk].set(cs_, mode="drop")
         buf_v = buf_v.at[slotk].set(vs, mode="drop")
         # exchange: piece t -> layer t
-        def a2a(x):
-            return jax.lax.all_to_all(x.reshape(L, cap_l), "layer", 0, 0,
-                                      tiled=False).reshape(L * cap_l)
-        buf_r, buf_c, buf_v = a2a(buf_r), a2a(buf_c), a2a(buf_v)
+        if overlap:
+            # one fused tree-level all-to-all, issued as soon as the radix
+            # placement finishes — XLA can overlap it with the argsort of
+            # the next shard_map program and fuses three launches into one
+            buf_r, buf_c, buf_v = jax.lax.all_to_all(
+                (buf_r.reshape(L, cap_l), buf_c.reshape(L, cap_l),
+                 buf_v.reshape(L, cap_l)), "layer", 0, 0, tiled=False)
+            buf_r = buf_r.reshape(L * cap_l)
+            buf_c = buf_c.reshape(L * cap_l)
+            buf_v = buf_v.reshape(L * cap_l)
+        else:
+            # bulk-synchronous reference: placement completes, then three
+            # separate per-field exchanges
+            buf_r, buf_c, buf_v = jax.lax.optimization_barrier(
+                (buf_r, buf_c, buf_v))
+
+            def a2a(x):
+                return jax.lax.all_to_all(x.reshape(L, cap_l), "layer", 0, 0,
+                                          tiled=False).reshape(L * cap_l)
+
+            buf_r, buf_c, buf_v = a2a(buf_r), a2a(buf_c), a2a(buf_v)
         my_layer = jax.lax.axis_index("layer")
         # localize columns to my sub-block and merge
         valid = buf_r != SENTINEL
@@ -439,7 +730,8 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
 def spgemm_2d_batched(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC,
                       *, mesh: Mesh, prod_cap: int, out_cap: int,
                       nbatch: int, variant: str = "rotation",
-                      mask: MaskSpec | None = None):
+                      mask: MaskSpec | None = None, schedule=None,
+                      overlap: bool = True, compress: str | None = None):
     """Batched SpGEMM (paper §7.2): form C in ``nbatch`` column batches.
 
     Each batch multiplies A by the column-slab restriction of B, yielding a
@@ -447,14 +739,26 @@ def spgemm_2d_batched(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC,
     (HipMCL-style) so the full C never needs to exist in memory. Returns a
     list of (C_batch, ok) with C_batch's shape = full C shape (entries only
     in the slab).
+
+    With ``compress='int8'`` the quantization residual of A (re-sent every
+    batch) is carried across batches as error feedback, so A's wire error
+    does not accumulate over the batch loop.
     """
     nb_cols = b.nb  # tile width of B
     slab = -(-nb_cols // nbatch)
+    resid = jnp.zeros_like(a.val) if compress is not None else None
     outs = []
     for t in range(nbatch):
         bt = _restrict_cols(b, t * slab, slab)
-        c, ok = spgemm_2d(a, bt, sr, mesh=mesh, prod_cap=prod_cap,
-                          out_cap=out_cap, variant=variant, mask=mask)
+        if compress is not None:
+            c, ok, resid = spgemm_2d(
+                a, bt, sr, mesh=mesh, prod_cap=prod_cap, out_cap=out_cap,
+                variant=variant, mask=mask, schedule=schedule,
+                overlap=overlap, compress=compress, ef_resid=resid)
+        else:
+            c, ok = spgemm_2d(a, bt, sr, mesh=mesh, prod_cap=prod_cap,
+                              out_cap=out_cap, variant=variant, mask=mask,
+                              schedule=schedule, overlap=overlap)
         outs.append((c, ok))
     return outs
 

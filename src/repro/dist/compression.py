@@ -1,6 +1,7 @@
-"""Gradient compression for bandwidth-bound data parallelism (DESIGN.md §5).
+"""Wire compression: gradient reduction AND sparse exchange payloads.
 
-Two standard schemes, both pytree-polymorphic and jit-safe:
+Dense side (bandwidth-bound data parallelism, DESIGN.md §5) — two standard
+schemes, both pytree-polymorphic and jit-safe:
 
 - ``int8_quantize``: per-tensor symmetric int8 quantize-dequantize. The
   returned tree is float again (ready for the optimizer); the int8 payload
@@ -9,11 +10,57 @@ Two standard schemes, both pytree-polymorphic and jit-safe:
   feedback [Stich et al.]: the residual (what was NOT sent) is carried in
   state and added back next step, so mass is preserved exactly:
   ``kept + residual == grad + old_residual``.
+
+Sparse side (distributed SpGEMM value payloads, DESIGN.md §4.8):
+
+- ``quantize_payload``/``dequantize_payload``: per-tile symmetric int8 for
+  COO value buffers with nnz-aware scale (padding slots never inflate the
+  scale and quantize to exact 0) plus the same error-feedback contract as
+  the dense path: ``dequantize(q8, scale) + new_resid == val + resid``
+  exactly, and ``|new_resid| ≤ scale/2`` per live entry (one rounding
+  step). The int8 buffer is the wire payload; the scale travels with it.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def quantize_payload(val, nnz=None, resid=None):
+    """Per-tile symmetric int8 quantization of a COO value buffer.
+
+    ``val`` is (..., cap) with live entries in the first ``nnz[...]`` slots
+    of the last axis (all slots live when nnz is None). ``resid`` is a
+    prior error-feedback residual shaped like ``val`` (added before
+    quantizing). Returns ``(q8, scale, new_resid)`` where q8 is int8
+    shaped like val (0 on padding), scale is val.dtype shaped val.shape
+    [:-1] (the per-tile dequantization factor, max live |e|/127), and
+    new_resid = (val + resid) − q8·scale, zeroed on padding.
+    """
+    e = val if resid is None else val + resid
+    if nnz is not None:
+        live = jnp.arange(val.shape[-1], dtype=jnp.int32) < nnz[..., None]
+        mag = jnp.max(jnp.abs(jnp.where(live, e, 0)), axis=-1)
+    else:
+        live = None
+        mag = jnp.max(jnp.abs(e), axis=-1)
+    # the scale keeps the ORIGINAL value dtype — downstream dequantization
+    # restores it even though the wire carries int8
+    scale = jnp.maximum(mag / 127.0, 1e-30).astype(val.dtype)
+    q8 = jnp.clip(jnp.round(e / scale[..., None]), -127, 127) \
+        .astype(jnp.int8)
+    if live is not None:
+        q8 = jnp.where(live, q8, jnp.int8(0))
+    new_resid = (e - q8.astype(val.dtype) * scale[..., None]) \
+        .astype(val.dtype)
+    if live is not None:
+        new_resid = jnp.where(live, new_resid, jnp.zeros((), val.dtype))
+    return q8, scale, new_resid
+
+
+def dequantize_payload(q8, scale):
+    """Inverse of :func:`quantize_payload` (scale broadcast over cap)."""
+    return q8.astype(scale.dtype) * scale[..., None]
 
 
 def int8_quantize(tree):

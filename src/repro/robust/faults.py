@@ -60,6 +60,8 @@ KNOWN_SITES = {
     "spgemm3d.comm_a": "3D CA SpGEMM: A entering the per-layer multiply",
     "spgemm3d.comm_b": "3D CA SpGEMM: B entering the per-layer multiply",
     "spmspv.comm_x": "SpMSpV: frontier x entering the 'row' all-gather",
+    "dist.compressed_exchange": "2D SUMMA: int8-compressed value payload "
+                                "entering the exchange collectives",
     "merge.kv_ok": "merge engine: kv-tree overflow flag (trace-time)",
     "plan.spgemm.ok": "planner: SpGEMM ok flags read on the host",
     "plan.spmspv.ok": "planner: SpMSpV ok flags read on the host",
@@ -229,7 +231,14 @@ def _corrupt_tiles(f: Fault, row, col, val, nnz, has_col: bool):
         else:
             V[t, idxs] = np.iinfo(V.dtype).max
     elif f.kind == "corrupt_val":
-        V[t, idxs] = V[t, idxs] * 1000 + 7
+        if np.issubdtype(V.dtype, np.integer):
+            # narrow wire dtypes (int8 compressed payloads): numpy 2
+            # rejects out-of-range Python scalars — widen, then truncate
+            # back with C-cast wraparound
+            V[t, idxs] = (V[t, idxs].astype(np.int64) * 1000 + 7) \
+                .astype(V.dtype)
+        else:
+            V[t, idxs] = V[t, idxs] * 1000 + 7
     elif f.kind == "corrupt_idx":
         # out of tile bounds but not the padding sentinel
         R[t, idxs] = 2**30 + np.arange(k, dtype=R.dtype)

@@ -10,19 +10,27 @@ symbolic bound" state that previously just raised) — the planner walks a
 documented ladder of progressively more conservative pipeline configurations
 instead of dying (DESIGN.md §8):
 
-    1. ``postfilter``           fused masked multiply  -> unmasked multiply
+    1. ``serial-schedule``      overlapped / hybrid / compressed exchange
+                                schedule -> bulk-synchronous Cannon rotation
+                                (overlap off, compression off; §4.8). The
+                                recorded entry names WHICH schedule features
+                                were abandoned: ``serial-schedule:overlap+
+                                schedule=hybrid+compress=int8``.
+    2. ``postfilter``           fused masked multiply  -> unmasked multiply
                                 + explicit post-filter (mask semantics kept,
                                 pushdown win given up)
-    2. ``sort-merge``           deferred/incremental merge engine -> the
+    3. ``sort-merge``           deferred/incremental merge engine -> the
                                 seed concat-and-sort merge
-    3. ``legacy-dedup``         packed-key dedup -> the seed two-key sort
+    4. ``legacy-dedup``         packed-key dedup -> the seed two-key sort
                                 (process-global: ``merge.force_legacy_dedup``)
-    4. ``pure-jax-segreduce``   accelerator segmented-reduce kernel -> the
+    5. ``pure-jax-segreduce``   accelerator segmented-reduce kernel -> the
                                 pure-JAX paths (process-global uninstall)
 
-Each rung taken is appended to the plan's ``degraded`` tuple. Rungs 3/4
-flip process-global switches — once a kernel is implicated, every later
-call avoids it until :func:`reset_degradation`.
+Each rung taken is appended to the plan's ``degraded`` tuple (rungs that
+abandon a configuration record it after a ``:``, so degraded runs are
+diagnosable from the plan object alone). Rungs 4/5 flip process-global
+switches — once a kernel is implicated, every later call avoids it until
+:func:`reset_degradation`.
 
 **CheckpointedLoop.** Iterative apps (PageRank / HipMCL / FastSV) wrap their
 iteration in this class to get per-iteration checkpoint/resume in the
@@ -41,20 +49,40 @@ import numpy as np
 
 from . import faults
 
-LADDER = ("postfilter", "sort-merge", "legacy-dedup", "pure-jax-segreduce")
+LADDER = ("serial-schedule", "postfilter", "sort-merge", "legacy-dedup",
+          "pure-jax-segreduce")
 
-# Rungs meaningful per planned-op family (SpMSpV has no merge-engine path).
+# Rungs meaningful per planned-op family (SpMSpV has no merge-engine path
+# and no overlapped/compressed exchange schedule).
 _RUNGS = {"spgemm": LADDER,
           "spmspv": ("postfilter", "pure-jax-segreduce")}
 
 
+def _fancy_schedule(plan) -> list:
+    """Schedule features the 'serial-schedule' rung would abandon."""
+    desc = []
+    if getattr(plan, "overlap", False):
+        desc.append("overlap")
+    s = getattr(plan, "schedule", None)
+    if s not in (None, "rotate"):
+        desc.append("schedule=" + (s if isinstance(s, str) else "hybrid"))
+    if getattr(plan, "compress", None) is not None:
+        desc.append(f"compress={plan.compress}")
+    return desc
+
+
 def next_rung(plan, mask, kind: str = "spgemm") -> str | None:
     """First untried, applicable ladder rung for ``plan`` (None = exhausted)."""
-    taken = set(getattr(plan, "degraded", ()))
+    # rungs that abandon a configuration record it as 'rung:<what>' — match
+    # on the rung name so a taken rung is never offered twice
+    taken = {t.split(":", 1)[0] for t in getattr(plan, "degraded", ())}
     for rung in _RUNGS[kind]:
         if rung in taken:
             continue
-        if rung == "postfilter":
+        if rung == "serial-schedule":
+            if _fancy_schedule(plan):
+                return rung
+        elif rung == "postfilter":
             if mask is not None:
                 return rung
         elif rung == "sort-merge":
@@ -85,7 +113,15 @@ def apply_rung(rung: str, plan):
         f"ladder so far: {getattr(plan, 'degraded', ())})",
         RuntimeWarning, stacklevel=3)
     kw = dict(degraded=tuple(getattr(plan, "degraded", ())) + (rung,))
-    if rung == "sort-merge" and hasattr(plan, "merge"):
+    if rung == "serial-schedule":
+        # record WHICH schedule configuration was abandoned (bugfix: merge
+        # rungs always recorded themselves; schedule descent now does too)
+        what = "+".join(_fancy_schedule(plan)) or "none"
+        kw["degraded"] = tuple(getattr(plan, "degraded", ())) \
+            + (f"{rung}:{what}",)
+        kw.update(overlap=False, schedule="rotate", compress=None,
+                  variant="rotation")
+    elif rung == "sort-merge" and hasattr(plan, "merge"):
         kw["merge"] = "sort"
     elif rung == "legacy-dedup":
         from ..core import merge

@@ -1,0 +1,218 @@
+"""Overlap/schedule/compression scenarios for distributed SpGEMM (§4.8),
+executed in a subprocess with REPRO_DEVICES forced host devices (tests must
+not pollute the main process's single-device jax).
+
+Usage: python tests/dist_overlap_scenarios.py <scenario> [...]
+Prints "PASS <scenario>" per scenario or raises.
+
+The core contract under test: overlap=True (double-buffered stage loops)
+and overlap=False (bulk-synchronous, optimization_barrier-pinned) run
+identical per-stage math in identical order, so their results are BITWISE
+equal — across every schedule × merge × masked/unmasked combination. The
+SUMMA-ordered schedules ('alltoall', 'bcast', hybrid tuples) additionally
+multiply identical stage operands in identical order, so they are bitwise
+equal to each other; 'rotate' visits stages in a device-dependent order and
+is only required to match the dense oracle numerically.
+"""
+import os
+import sys
+
+N_DEV = int(os.environ.get("REPRO_DEVICES", "8"))
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={N_DEV} "
+    + os.environ.get("XLA_FLAGS_EXTRA", ""))
+
+import numpy as np                                            # noqa: E402
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (ARITHMETIC, DistSpMat, DistSpMat3D, make_grid,  # noqa: E402
+                        spgemm_2d, spgemm_2d_batched, spgemm_3d,
+                        structural)
+
+Q = 2           # 2x2 grid fits the CI REPRO_DEVICES=8 mesh
+M = 96
+SCHEDULES = {
+    "rotate": dict(schedule="rotate"),
+    "alltoall": dict(schedule="alltoall"),
+    "bcast": dict(schedule="bcast"),
+    "hybrid": dict(schedule=("gather",) * (Q - 1) + ("bcast",)),
+}
+
+
+def rand_coo(rng, m, n, density):
+    mask = rng.random((m, n)) < density
+    r, c = np.nonzero(mask)
+    v = (rng.random(len(r)) + 0.5).astype(np.float32)
+    dense = np.zeros((m, n), np.float32)
+    dense[r, c] = v
+    return dense, (r.astype(np.int64), c.astype(np.int64), v)
+
+
+def _fixture(seed=0, density=0.08, with_mask=False):
+    rng = np.random.default_rng(seed)
+    mesh = make_grid(Q, Q)
+    da, ea = rand_coo(rng, M, M, density)
+    db, eb = rand_coo(rng, M, M, density)
+    A = DistSpMat.from_global_coo((M, M), *ea, (Q, Q), mesh=mesh, cap=1024)
+    B = DistSpMat.from_global_coo((M, M), *eb, (Q, Q), mesh=mesh, cap=1024)
+    mk = dm = None
+    if with_mask:
+        dm, em = rand_coo(rng, M, M, 0.1)
+        Mm = DistSpMat.from_global_coo((M, M), *em, (Q, Q), mesh=mesh,
+                                       cap=1024)
+        mk = structural(Mm)
+    return mesh, A, B, da, db, mk, dm
+
+
+def _fields(c):
+    return [np.asarray(x) for x in (c.row, c.col, c.val, c.nnz)]
+
+
+def _run(mesh, A, B, *, merge, mask=None, overlap=True, **kw):
+    c, ok = spgemm_2d(A, B, ARITHMETIC, mesh=mesh, prod_cap=1 << 13,
+                      out_cap=1 << 12, merge=merge, mask=mask,
+                      overlap=overlap, **kw)
+    assert bool(jnp.all(ok)), "overflow"
+    return c
+
+
+def scenario_overlap_bitwise(sched_name):
+    """overlap on == overlap off BITWISE, for every merge and masked/not."""
+    mesh, A, B, da, db, mk, dm = _fixture(with_mask=True)
+    kw = SCHEDULES[sched_name]
+    combos = [(m, None, None) for m in ("sort", "deferred", "incremental")]
+    combos.append(("deferred", mk, dm))
+    for merge, mask, dmask in combos:
+        on = _run(mesh, A, B, merge=merge, mask=mask, overlap=True, **kw)
+        off = _run(mesh, A, B, merge=merge, mask=mask, overlap=False, **kw)
+        for x, y in zip(_fields(on), _fields(off)):
+            np.testing.assert_array_equal(
+                x, y, err_msg=f"{sched_name}:{merge}:masked={mask is not None}"
+                " overlap on/off disagree bitwise")
+        ref = da @ db if dmask is None else (da @ db) * (dmask != 0)
+        np.testing.assert_allclose(on.to_dense()[:M, :M], ref,
+                                   rtol=1e-4, atol=1e-5)
+    print(f"PASS overlap_bitwise:{sched_name}")
+
+
+def scenario_schedule_equivalence():
+    """SUMMA-ordered schedules (alltoall/bcast/hybrid) agree bitwise with
+    each other; rotate agrees with the oracle numerically."""
+    mesh, A, B, da, db, _, _ = _fixture(seed=3)
+    outs = {name: _run(mesh, A, B, merge="deferred", **kw)
+            for name, kw in SCHEDULES.items()}
+    base = _fields(outs["alltoall"])
+    for name in ("bcast", "hybrid"):
+        for x, y in zip(base, _fields(outs[name])):
+            np.testing.assert_array_equal(
+                x, y, err_msg=f"alltoall vs {name} disagree bitwise")
+    for name, c in outs.items():
+        np.testing.assert_allclose(c.to_dense()[:M, :M], da @ db,
+                                   rtol=1e-4, atol=1e-5,
+                                   err_msg=f"{name} vs dense oracle")
+    print("PASS schedule_equivalence")
+
+
+def scenario_overlap_bitwise_3d():
+    """3D CA: fused tree all-to-all (overlap) == per-field a2a (serial)."""
+    L = 2
+    mesh = make_grid(Q, Q, layers=L)
+    rng = np.random.default_rng(5)
+    da, ea = rand_coo(rng, 80, 80, 0.08)
+    db, eb = rand_coo(rng, 80, 80, 0.08)
+    A3 = DistSpMat3D.from_global_coo((80, 80), *ea, (L, Q, Q), "acol",
+                                     mesh=mesh, cap=256)
+    B3 = DistSpMat3D.from_global_coo((80, 80), *eb, (L, Q, Q), "brow",
+                                     mesh=mesh, cap=256)
+    outs = []
+    for overlap in (True, False):
+        c3, ok = spgemm_3d(A3, B3, ARITHMETIC, mesh=mesh, prod_cap=8192,
+                           out_cap=4096, overlap=overlap)
+        assert bool(jnp.all(ok)), "overflow"
+        outs.append([np.asarray(x) for x in (c3.row, c3.col, c3.val,
+                                             c3.nnz)])
+        np.testing.assert_allclose(c3.to_dense()[:80, :80], da @ db,
+                                   rtol=1e-4, atol=1e-5)
+    for x, y in zip(*outs):
+        np.testing.assert_array_equal(x, y,
+                                      err_msg="3D overlap on/off disagree")
+    print("PASS overlap_bitwise_3d")
+
+
+def scenario_compressed_exchange():
+    """int8-compressed wire payloads: bounded error vs the uncompressed
+    result, bitwise-stable under the overlap toggle, on rotate AND hybrid
+    schedules."""
+    mesh, A, B, da, db, _, _ = _fixture(seed=7)
+    exact = _run(mesh, A, B, merge="deferred", schedule="rotate")
+    dex = exact.to_dense()[:M, :M]
+    # per-entry error bound: each int8 value carries |err| <= scale/2 with
+    # scale <= max|val|/127 <= 1.5/127; products of two quantized operands
+    # then sum over <= M contraction terms
+    vmax = 1.5
+    tol = 2 * (vmax / 254) * vmax * (np.count_nonzero(da, axis=0).max() + 1)
+    for name in ("rotate", "alltoall", "bcast", "hybrid"):
+        on = _run(mesh, A, B, merge="deferred", compress="int8",
+                  overlap=True, **SCHEDULES[name])
+        off = _run(mesh, A, B, merge="deferred", compress="int8",
+                   overlap=False, **SCHEDULES[name])
+        for x, y in zip(_fields(on), _fields(off)):
+            np.testing.assert_array_equal(
+                x, y, err_msg=f"compressed {name} overlap on/off disagree")
+        err = np.abs(on.to_dense()[:M, :M] - dex).max()
+        assert err <= tol, (name, err, tol)
+        assert err > 0, "compression was a silent no-op"
+    print("PASS compressed_exchange")
+
+
+def scenario_compressed_batched_feedback():
+    """spgemm_2d_batched with compress='int8': error feedback across
+    batches keeps every batch within the single-shot error bound, and the
+    union of batches matches the full product."""
+    mesh, A, B, da, db, _, _ = _fixture(seed=9)
+    outs = spgemm_2d_batched(A, B, ARITHMETIC, mesh=mesh, prod_cap=1 << 13,
+                             out_cap=1 << 12, nbatch=2, compress="int8")
+    vmax = 1.5
+    tol = 2 * (vmax / 254) * vmax * (np.count_nonzero(da, axis=0).max() + 1)
+    acc = np.zeros((M, M), np.float32)
+    for c, ok in outs:
+        assert bool(jnp.all(ok))
+        acc = acc + c.to_dense()[:M, :M]
+    assert np.abs(acc - da @ db).max() <= tol
+    print("PASS compressed_batched_feedback")
+
+
+def scenario_compress_rejects_bad_semiring():
+    """Non-zero additive identity (MIN_PLUS) must be rejected loudly."""
+    from repro.core import MIN_PLUS
+    mesh, A, B, _, _, _, _ = _fixture(seed=11)
+    try:
+        spgemm_2d(A, B, MIN_PLUS, mesh=mesh, prod_cap=1 << 13,
+                  out_cap=1 << 12, compress="int8")
+    except ValueError as e:
+        assert "identity" in str(e)
+    else:
+        raise AssertionError("compress='int8' accepted a +inf identity")
+    print("PASS compress_rejects_bad_semiring")
+
+
+SCENARIOS = {
+    "overlap_bitwise_rotate": lambda: scenario_overlap_bitwise("rotate"),
+    "overlap_bitwise_alltoall": lambda: scenario_overlap_bitwise("alltoall"),
+    "overlap_bitwise_bcast": lambda: scenario_overlap_bitwise("bcast"),
+    "overlap_bitwise_hybrid": lambda: scenario_overlap_bitwise("hybrid"),
+    "schedule_equivalence": scenario_schedule_equivalence,
+    "overlap_bitwise_3d": scenario_overlap_bitwise_3d,
+    "compressed_exchange": scenario_compressed_exchange,
+    "compressed_batched_feedback": scenario_compressed_batched_feedback,
+    "compress_rejects_bad_semiring": scenario_compress_rejects_bad_semiring,
+}
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or list(SCENARIOS)
+    for name in names:
+        SCENARIOS[name]()

@@ -1,0 +1,111 @@
+"""Overlapped vs serial distributed-SpGEMM schedules (§4.8).
+
+The multi-device half runs tests/dist_overlap_scenarios.py in a subprocess
+on a REPRO_DEVICES=8 mesh (2x2 grid — the CI bench-smoke mesh): bitwise
+oracle equality of overlap=True vs overlap=False across schedule × merge ×
+masked/unmasked combos, cross-schedule equivalence, the 3D fused
+all-to-all, and int8-compressed exchanges (error bounds + batched error
+feedback). The in-process half property-tests dist/compression.py's
+quantize_payload on semiring value buffers — no devices needed.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.semiring import ARITHMETIC
+from repro.dist.compression import dequantize_payload, quantize_payload
+
+HERE = os.path.dirname(__file__)
+SCRIPT = os.path.join(HERE, "dist_overlap_scenarios.py")
+
+GROUPS = {
+    "rotate": ["overlap_bitwise_rotate"],
+    "alltoall": ["overlap_bitwise_alltoall"],
+    "bcast": ["overlap_bitwise_bcast"],
+    "hybrid": ["overlap_bitwise_hybrid", "schedule_equivalence"],
+    "3d": ["overlap_bitwise_3d"],
+    "compressed": ["compressed_exchange", "compressed_batched_feedback",
+                   "compress_rejects_bad_semiring"],
+}
+
+
+def run_scenarios(names):
+    env = dict(os.environ, REPRO_DEVICES="8")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, SCRIPT] + names,
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, \
+        f"scenarios {names} failed:\n{proc.stdout}\n{proc.stderr}"
+    for n in names:
+        assert "PASS" in proc.stdout
+
+
+@pytest.mark.parametrize("group", sorted(GROUPS), ids=str)
+def test_overlap_group(group):
+    run_scenarios(GROUPS[group])
+
+
+# --------------------------------------------------------------------------
+# quantize_payload property tests (in-process, single device)
+# --------------------------------------------------------------------------
+
+def _tiles(seed, shape=(2, 2), cap=64):
+    """Random COO-style value buffers with live prefixes + identity padding."""
+    rng = np.random.default_rng(seed)
+    nnz = rng.integers(0, cap + 1, shape).astype(np.int32)
+    val = (rng.standard_normal(shape + (cap,)) * 10).astype(np.float32)
+    live = np.arange(cap) < nnz[..., None]
+    val = np.where(live, val, np.float32(ARITHMETIC.add.identity))
+    return val, nnz, live
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_quantize_roundtrip_error_bound(seed):
+    """|val − deq| ≤ scale/2 per live entry; padding is exactly 0 int8."""
+    val, nnz, live = _tiles(seed)
+    q8, scale, resid = quantize_payload(val, nnz)
+    q8, scale, resid = map(np.asarray, (q8, scale, resid))
+    assert q8.dtype == np.int8 and scale.dtype == val.dtype
+    assert np.all(q8[~live] == 0) and np.all(resid[~live] == 0)
+    deq = np.asarray(dequantize_payload(q8, scale))
+    err = np.abs(val - deq)
+    # scale/2 plus one ulp of the scale multiply
+    bound = scale[..., None] / 2 + np.abs(deq) * 1e-6
+    assert np.all(err[live] <= bound[live] + 1e-30)
+    # the scale never exceeds max live |val| / 127 (no padding inflation)
+    mx = np.max(np.abs(np.where(live, val, 0)), axis=-1)
+    assert np.all(scale <= np.maximum(mx / 127, 1e-30) * (1 + 1e-6))
+
+
+@pytest.mark.parametrize("seed", [5, 6])
+def test_quantize_error_feedback_exact(seed):
+    """deq + new_resid == val + resid EXACTLY (the EF mass contract), and
+    feeding the residual back keeps the error from accumulating."""
+    val, nnz, live = _tiles(seed)
+    resid = None
+    for _ in range(4):
+        q8, scale, resid_new = quantize_payload(val, nnz, resid)
+        e = val if resid is None else val + np.asarray(resid)
+        deq = np.asarray(dequantize_payload(q8, scale))
+        np.testing.assert_array_equal(
+            (deq + np.asarray(resid_new))[live], e[live],
+            err_msg="EF mass not preserved exactly")
+        # residual stays within one quantization step — no accumulation
+        step = np.broadcast_to(np.asarray(scale)[..., None], live.shape)
+        assert np.all(np.abs(np.asarray(resid_new))[live]
+                      <= step[live] / 2 * (1 + 1e-6))
+        resid = resid_new
+
+
+def test_quantize_all_padding_tile():
+    """An empty tile (nnz=0) quantizes to all-zero int8 with a benign scale."""
+    val = np.zeros((1, 1, 16), np.float32)
+    nnz = np.zeros((1, 1), np.int32)
+    q8, scale, resid = quantize_payload(val, nnz)
+    assert np.all(np.asarray(q8) == 0)
+    assert np.all(np.asarray(resid) == 0)
+    assert np.all(np.asarray(scale) > 0)   # clipped away from 0 — deq-safe

@@ -192,6 +192,38 @@ class TestCommFaults:
         i1, v1 = y.to_global()
         assert np.array_equal(i0, i1) and np.array_equal(v0, v1)
 
+    def test_compressed_exchange_detect_and_recover(self, mesh, ab):
+        """Corrupting the int8 wire payload trips the audit bracket; the
+        pristine-input retry still runs compressed, so the recovered result
+        is exact up to the quantization bound."""
+        dense, A = ab
+        with audit.at_level("boundary"), \
+                faults.inject("dist.compressed_exchange:corrupt_val"), \
+                pytest.warns(RuntimeWarning, match="failed audit"):
+            C, plan = spgemm_planned(A, A, ARITHMETIC, mesh=mesh,
+                                     compress="int8")
+        assert plan.attempts == 2 and plan.degraded == ()
+        assert plan.compress == "int8"
+        np.testing.assert_allclose(C.to_dense()[:40, :40], dense @ dense,
+                                   rtol=0.05, atol=0.5)
+
+    def test_persistent_compressed_fault_sheds_schedule(self, mesh, ab):
+        """A compressed exchange that fails audit on every attempt walks the
+        ladder to the 'serial-schedule' rung: compression (and overlap) are
+        abandoned, the fault site is never reached again, and the exact
+        uncompressed result comes back — with the shed features recorded."""
+        dense, A = ab
+        with audit.at_level("boundary"), \
+                faults.inject("dist.compressed_exchange:corrupt_val:count=99"), \
+                pytest.warns(RuntimeWarning, match="degrading pipeline"):
+            C, plan = spgemm_planned(A, A, ARITHMETIC, mesh=mesh,
+                                     compress="int8")
+        assert plan.compress is None and plan.overlap is False
+        assert any(d.startswith("serial-schedule:") and "compress=int8" in d
+                   for d in plan.degraded), plan.degraded
+        np.testing.assert_allclose(C.to_dense()[:40, :40], dense @ dense,
+                                   rtol=1e-4, atol=1e-5)
+
     def test_spgemm3d_comm_fails_loud(self, mesh):
         """spgemm_3d has no planner retry wrapper — corruption at its wire
         boundary must raise, not produce a wrong C."""
