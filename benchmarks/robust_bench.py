@@ -1,0 +1,157 @@
+"""Elastic-recovery benchmarks: what a topology fault actually costs.
+
+Rows (all host-measured, deterministic seeds):
+
+  robust_detect_deadline_us       time from a hung guarded exchange to the
+                                  ExchangeTimeout raise (budget 1 ms, hang
+                                  10 ms -> detection tracks the hang, not
+                                  the 6-hour CI timeout)
+  robust_backoff_total_us         the full deterministic 3-retry backoff
+                                  schedule for one site (what a transient
+                                  straggler adds end-to-end)
+  robust_regrid_4x4_to_2x2_us     live DistSpMat.regrid onto the smaller
+                                  grid (the in-process shrink primitive)
+  robust_ckpt_save_us             save_spmat through the CRC-manifest path
+  robust_ckpt_restore_shrink_us   restore_spmat onto a 2x smaller grid
+                                  (the crash-and-shrink resume primitive)
+  robust_steps_lost_crash_resume  iterations redone after a hard crash with
+                                  every=2 checkpointing (derived column);
+                                  µs is the redo cost at resume
+  robust_recovery_overhead_ratio  faulted spgemm (1 deadline trip + retry)
+                                  over clean spgemm wall time
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+import time
+import warnings
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _matrix(n=4096, nnz=40000, seed=0, grid=(4, 4)):
+    from repro.core import DistSpMat
+    rng = np.random.default_rng(seed)
+    r = rng.integers(0, n, nnz).astype(np.int64)
+    c = rng.integers(0, n, nnz).astype(np.int64)
+    v = rng.standard_normal(nnz).astype(np.float32)
+    return DistSpMat.from_global_coo((n, n), r, c, v, grid)
+
+
+def run(quick: bool = True):
+    from repro.core import ARITHMETIC, DistSpMat, make_grid
+    from repro.core.dist import restore_spmat, save_spmat
+    from repro.core.plan import spgemm as spgemm_planned
+    from repro.robust import deadline, faults
+    from repro.robust.deadline import ExchangeGuard, ExchangeTimeout
+    from repro.robust.recover import CheckpointedLoop, TopologyError
+
+    rows = []
+    reps = 3 if quick else 10
+
+    # -- time-to-detect: hung exchange vs wall-time deadline ---------------
+    g = ExchangeGuard(startup_deadline=0.001)
+    det = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        try:
+            with g.watch("bench.hang"):
+                time.sleep(0.010)           # the hang
+        except ExchangeTimeout:
+            det.append((time.perf_counter() - t0) * 1e6)
+    rows.append(("robust_detect_deadline_us", float(np.median(det)),
+                 "hang=10ms,budget=1ms"))
+
+    # -- deterministic backoff schedule ------------------------------------
+    g = ExchangeGuard(backoff_base=0.05, backoff_cap=5.0)
+    total = sum(g.backoff_delay("bench.site", a) for a in (1, 2, 3))
+    rows.append(("robust_backoff_total_us", total * 1e6,
+                 "3 retries, base=50ms"))
+
+    # -- live regrid (the in-process shrink primitive) ---------------------
+    m = _matrix()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        m2 = m.regrid((2, 2))
+    rows.append(("robust_regrid_4x4_to_2x2_us",
+                 (time.perf_counter() - t0) / reps * 1e6,
+                 f"n=4096,nnz=40000 -> cap={m2.cap}"))
+
+    # -- mesh-independent sparse checkpoint save/restore -------------------
+    tmp = tempfile.mkdtemp(prefix="robust_bench_")
+    try:
+        t0 = time.perf_counter()
+        for i in range(reps):
+            save_spmat(tmp, i, m)
+        save_us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append(("robust_ckpt_save_us", save_us, "CRC manifest"))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            m3, _ = restore_spmat(tmp, (2, 2))
+        rows.append(("robust_ckpt_restore_shrink_us",
+                     (time.perf_counter() - t0) / reps * 1e6,
+                     "restore 4x4 ckpt onto 2x2"))
+        assert np.array_equal(m3.to_dense(), m.to_dense())
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    # -- steps lost across a hard crash (every=2 checkpointing) ------------
+    tmp = tempfile.mkdtemp(prefix="robust_bench_loop_")
+    ran = []
+
+    def body(it, state):
+        ran.append(it)
+        return {"x": np.asarray(state["x"]) + 1}, False
+    try:
+        with faults.inject("loop.device_loss:crash:at=6"):
+            try:
+                CheckpointedLoop(tmp, every=2).run({"x": np.int64(0)},
+                                                   body, 10)
+            except TopologyError:
+                pass
+        crashed_after = len(ran)
+        t0 = time.perf_counter()
+        CheckpointedLoop(tmp, every=2).run({"x": np.int64(0)}, body, 10)
+        redo_us = (time.perf_counter() - t0) * 1e6
+        # TopologyError checkpoints the pre-crash state at the boundary, so
+        # the only repeated work is the interrupted iteration itself
+        lost = crashed_after + (len(ran) - crashed_after) - 10
+        rows.append(("robust_steps_lost_crash_resume", redo_us,
+                     f"steps_lost={lost}"))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    # -- end-to-end recovery overhead on a planned multiply ----------------
+    mesh = make_grid(1, 1)
+    rng = np.random.default_rng(1)
+    n = 128 if quick else 512
+    dense = (rng.random((n, n)) < 0.05).astype(np.float32)
+    r, c = np.nonzero(dense)
+    A = DistSpMat.from_global_coo((n, n), r.astype(np.int64),
+                                  c.astype(np.int64), dense[r, c], (1, 1),
+                                  mesh=mesh)
+    spgemm_planned(A, A, ARITHMETIC, mesh=mesh)      # warm the caches
+    t0 = time.perf_counter()
+    spgemm_planned(A, A, ARITHMETIC, mesh=mesh)
+    clean = time.perf_counter() - t0
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with deadline.configure(startup_deadline=0.005, backoff_base=0.002):
+            with faults.inject(
+                    "dist.exchange_deadline:delay:amount=0.02,count=1"):
+                t0 = time.perf_counter()
+                spgemm_planned(A, A, ARITHMETIC, mesh=mesh)
+                faulted = time.perf_counter() - t0
+    rows.append(("robust_recovery_overhead_ratio", faulted / max(clean, 1e-9),
+                 f"clean={clean * 1e6:.0f}us faulted={faulted * 1e6:.0f}us"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(quick="--full" not in sys.argv):
+        print(f"{name},{us:.1f},{derived}")

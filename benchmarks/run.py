@@ -5,17 +5,20 @@ subprocesses with forced host devices; everything else runs on the single
 real device. ``--full`` widens the sweeps.
 
 ``--json`` additionally writes the perf-trajectory artifacts (repo root):
-``BENCH_spgemm.json`` from the spgemm_local rows and ``BENCH_dist.json``
-from the distributed rows (the §4.8 sweep + evolution + scaling), each as
-benchmark rows plus every ``*_speedup*``/``*_ratio`` key, so future PRs
-can diff perf trajectories. Subsets that would silently omit an artifact
-are rejected: with ``--only``, ``--json`` requires both ``spgemm_local``
-and ``dist`` in the subset, and a failed dist subprocess is a hard error
-rather than a skipped artifact. CI's bench-smoke job runs
-``REPRO_DEVICES=8 python -m benchmarks.run --only spgemm_local,dist
---json`` from the repo root — the ``-m`` form is required so the
-``benchmarks`` package resolves.
+``BENCH_spgemm.json`` from the spgemm_local rows, ``BENCH_dist.json``
+from the distributed rows (the §4.8 sweep + evolution + scaling) and
+``BENCH_robust.json`` from the elastic-recovery rows (time-to-detect,
+regrid, checkpoint, steps-lost), each as benchmark rows plus every
+``*_speedup*``/``*_ratio`` key, so future PRs can diff perf trajectories.
+Subsets that would silently omit an artifact are rejected: with
+``--only``, ``--json`` requires ``spgemm_local``, ``dist`` and ``robust``
+in the subset, and a failed dist subprocess is a hard error rather than a
+skipped artifact. CI's bench-smoke job runs ``REPRO_DEVICES=8 python -m
+benchmarks.run --only spgemm_local,dist,robust --json`` from the repo
+root — the ``-m`` form is required so the ``benchmarks`` package
+resolves.
 
+  robust          §8      elastic recovery: detect/regrid/ckpt/steps-lost
   spmspv_sweep    Fig 3   SpMSpV/SpMV variant selection vs sparsity
   spgemm_local    §4.1    hash↔dense vs heap↔ESC crossover
   dist(evolution) Fig 5/6 2D SUMMA variants vs 3D CA (time + coll bytes)
@@ -129,13 +132,14 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
-    if args.json and only is not None and not {"spgemm_local",
-                                               "dist"} <= only:
+    if args.json and only is not None and not {"spgemm_local", "dist",
+                                               "robust"} <= only:
         # each artifact is built from its section's rows; silently writing
         # nothing (the old behavior) made perf-trajectory runs vacuous
         ap.error("--json writes BENCH_spgemm.json from the spgemm_local "
-                 "rows and BENCH_dist.json from the dist rows; include "
-                 "both in --only (or drop --only)")
+                 "rows, BENCH_dist.json from the dist rows and "
+                 "BENCH_robust.json from the robust rows; include all "
+                 "three in --only (or drop --only)")
 
     def want(name):
         return only is None or name in only
@@ -159,6 +163,13 @@ def main() -> None:
                     "a partial BENCH_dist.json")
             write_bench_json([r for p in parts for r in p],
                              path=os.path.join(ROOT, "BENCH_dist.json"))
+    if want("robust"):
+        from benchmarks import robust_bench
+        rows = robust_bench.run(quick=quick)
+        emit(rows)
+        if args.json:
+            write_bench_json(rows,
+                             path=os.path.join(ROOT, "BENCH_robust.json"))
     if want("apps"):
         from benchmarks import apps_bench
         emit(apps_bench.run(quick=quick))

@@ -22,8 +22,7 @@ from jax.sharding import Mesh
 
 from ..core import DistSpMat, DistVec
 from ..core.assign import assign, extract
-from ..core.coo import SENTINEL
-from ..core.dist import shard_put
+from ..core.dist import make_grid
 from ..core.plan import spmv_variant
 from ..core.semiring import MIN_INT, Semiring
 from ..core.spmv import spmv_iter
@@ -35,60 +34,94 @@ MIN_SELECT2ND_I32 = Semiring(MIN_INT, lambda a, b: b, "min_select2nd_i32")
 def fastsv(a: DistSpMat, *, mesh: Mesh, max_iters: int = 64,
            skew_aware: bool = False,
            checkpoint_dir: str | None = None,
-           checkpoint_every: int = 1) -> np.ndarray:
+           checkpoint_every: int = 1,
+           elastic: bool = False, watchdog=None) -> np.ndarray:
     """Connected-component labels of the *symmetric* graph ``a``.
 
     ``checkpoint_dir`` checkpoints the parent vector each hooking iteration
     (robust/recover.CheckpointedLoop) — a crashed run resumed with the same
-    directory finishes bitwise-identically. The final (cheap, idempotent)
+    directory finishes bitwise-identically. The checkpointed state is the
+    GLOBAL (n,) parent vector, mesh-independent: a run crashed on one grid
+    resumes on any other (every hooking op is an exact int32 min, so even
+    the cross-grid replay is bitwise). The final (cheap, idempotent)
     pointer-jumping sweep is not checkpointed.
+
+    ``elastic=True`` survives an in-process TopologyError by regridding the
+    graph onto the next smaller square grid and re-running the interrupted
+    hooking iteration there.
     """
     n = a.shape[0]
-    grid = a.grid
-    pr, pc = grid
-    # f starts as identity; padding tail points at INT_MAX-ish self ids so
-    # it never wins a min and never hooks a real vertex
-    vb = -(-n // (pr * pc))
-    npad = vb * pr * pc
-    f0 = np.arange(npad, dtype=np.int32)
-    f = DistVec.from_global(f0, grid, layout="col", mesh=mesh)
-    f.data.block_until_ready()
 
-    # worst-case hooking traffic concentrates on root pieces — size the
-    # router for it (the skew-aware path offloads heavy roots to broadcast)
-    rcap = max(npad, 64)
-    variant = spmv_variant(a)   # planner: match the tile's sort order
+    ctx: dict = {}
+
+    def setup(a2: DistSpMat, mesh2: Mesh):
+        pr, pc = a2.grid
+        vb = -(-n // (pr * pc))
+        ctx.update(
+            mesh=mesh2, grid=a2.grid, a=a2,
+            # padding tail holds self ids ≥ n: never wins a min, never
+            # hooks a real vertex
+            npad=vb * pr * pc,
+            # worst-case hooking traffic concentrates on root pieces —
+            # size the router for it (the skew-aware path offloads heavy
+            # roots to broadcast)
+            rcap=max(vb * pr * pc, 64),
+            variant=spmv_variant(a2))  # planner: match the tile sort order
+
+    setup(a, mesh)
+
+    def distribute(f_g: np.ndarray) -> DistVec:
+        """Global (n,) parents -> padded DistVec on the current grid."""
+        tail = np.arange(n, ctx["npad"], dtype=np.int32)
+        return DistVec.from_global(
+            np.concatenate([np.asarray(f_g, np.int32), tail]),
+            ctx["grid"], layout="col", mesh=ctx["mesh"])
 
     # loop body as a pure function of the flat state dict — the SAME body
     # runs bare and checkpointed, which is what makes resume bitwise-exact
     def body(it, state):
-        f_old = shard_put(DistVec(jnp.asarray(state["f"]), n, grid, "col"),
-                          mesh)
+        mesh2, grid2 = ctx["mesh"], ctx["grid"]
+        rcap = ctx["rcap"]
+        f_old = distribute(state["f"])
         # gf = f[f]  (grandparents)
-        gf_vals, ok = extract(f_old, f_old.data.astype(jnp.int32), mesh=mesh,
-                              route_cap=rcap)
+        gf_vals, ok = extract(f_old, f_old.data.astype(jnp.int32),
+                              mesh=mesh2, route_cap=rcap)
         assert bool(jnp.all(ok))
-        gf = DistVec(gf_vals, n, grid, "col")
+        gf = DistVec(gf_vals, n, grid2, "col")
         # h[u] = min over neighbors of gf — (min, select2nd) SpMV
-        h = spmv_iter(a, gf, MIN_SELECT2ND_I32, mesh=mesh,   # layout 'col'
-                      variant=variant)
+        h = spmv_iter(ctx["a"], gf, MIN_SELECT2ND_I32, mesh=mesh2,  # 'col'
+                      variant=ctx["variant"])
         # stochastic hooking: f[f_old[u]] = min(·, h[u]) — distributed assign
         f2, ok = assign(f_old, f_old.data.astype(jnp.int32), h.data,
-                        mesh=mesh, add=MIN_INT, accumulate=True,
+                        mesh=mesh2, add=MIN_INT, accumulate=True,
                         skew_aware=skew_aware, route_cap=rcap)
         assert bool(jnp.all(ok))
         # aggressive hooking + shortcutting (piece-aligned, no comm)
         fd = jnp.minimum(jnp.minimum(f2.data, h.data), gf.data)
-        return {"f": fd}, bool(jnp.all(fd == f_old.data))
+        f_new = DistVec(fd, ctx["npad"], grid2, "col")
+        f_g = f_new.to_global()[:n].astype(np.int32)
+        # padding entries are fixed points (own id vs INT_MAX h), so
+        # convergence on the real prefix IS convergence
+        return {"f": f_g}, bool(np.array_equal(f_g,
+                                               np.asarray(state["f"])))
 
-    loop = CheckpointedLoop(checkpoint_dir, every=checkpoint_every)
-    state = loop.run({"f": f.data}, body, max_iters)
-    f = DistVec(jnp.asarray(state["f"]), n, grid, "col")
+    on_topology = None
+    if elastic:
+        def on_topology(state, err):
+            q = max(ctx["grid"][0] // 2, 1)
+            new_mesh = make_grid(q, q)
+            setup(ctx["a"].regrid((q, q), mesh=new_mesh), new_mesh)
+            return state
+
+    loop = CheckpointedLoop(checkpoint_dir, every=checkpoint_every,
+                            watchdog=watchdog, on_topology=on_topology)
+    state = loop.run({"f": np.arange(n, dtype=np.int32)}, body, max_iters)
     # final pointer jumping to full convergence
+    f = distribute(state["f"])
     for _ in range(max_iters):
-        gf_vals, _ = extract(f, f.data.astype(jnp.int32), mesh=mesh,
-                             route_cap=rcap)
-        gf = DistVec(gf_vals, n, grid, "col")
+        gf_vals, _ = extract(f, f.data.astype(jnp.int32), mesh=ctx["mesh"],
+                             route_cap=ctx["rcap"])
+        gf = DistVec(gf_vals, ctx["npad"], ctx["grid"], "col")
         if bool(jnp.all(gf.data == f.data)):
             break
         f = gf

@@ -18,8 +18,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from ..core import ARITHMETIC, DistSpMat
-from ..core.coo import SENTINEL
-from ..core.dist import shard_put
+from ..core.dist import make_grid
 from ..core.mask import value_mask
 from ..core.matops import (mat_apply_local, mat_ewise_local, mat_reduce,
                            mat_scale_cols, mat_sum, mat_transpose, vec_apply)
@@ -40,7 +39,8 @@ def hipmcl(a: DistSpMat, *, mesh: Mesh, inflation: float = 2.0,
            prod_cap: int | None = None, out_cap: int | None = None,
            tol: float = 1e-5,
            checkpoint_dir: str | None = None,
-           checkpoint_every: int = 1) -> np.ndarray:
+           checkpoint_every: int = 1,
+           elastic: bool = False, watchdog=None) -> np.ndarray:
     """Cluster the graph; returns per-vertex cluster labels.
 
     Expansion capacities are re-planned each iteration from the current
@@ -49,12 +49,20 @@ def hipmcl(a: DistSpMat, *, mesh: Mesh, inflation: float = 2.0,
 
     ``checkpoint_dir`` checkpoints the iterate each MCL iteration (the
     paper's flagship runs for days — robust/recover.CheckpointedLoop).
-    State restores manifest-driven (no shape template) because the
-    re-planned capacities change the iterate's array shapes between
-    iterations; a crashed run resumed with the same directory finishes
-    bitwise-identically.
+    The checkpointed state is the GLOBAL int64 COO of the iterate —
+    mesh-independent, and necessarily manifest-driven (restore_flat, no
+    shape template) because pruning changes nnz between iterations; a
+    crashed run resumed with the same directory on the same grid finishes
+    bitwise-identically. ``elastic=True`` additionally survives an
+    in-process TopologyError by re-assembling the iterate on the next
+    smaller square grid (same-result, though not bitwise — SpGEMM merge
+    order is grid-dependent in f32).
     """
     n = a.shape[0]
+
+    # grid-dependent context, rebuildable so the elastic path can shrink it
+    ctx = {"mesh": mesh, "grid": a.grid}
+
     # callers should include self-loops in `a` (MCL standard practice)
     c = _normalize_cols(a, mesh=mesh)
     # value-predicate mask (§4.7): entries of the expansion C·C already
@@ -67,49 +75,60 @@ def hipmcl(a: DistSpMat, *, mesh: Mesh, inflation: float = 2.0,
     expansion_mask = value_mask(lambda v: v > prune_threshold)
 
     def pack_state(c: DistSpMat, prev_sum: float) -> dict:
-        # flat arrays only: per-iteration re-planning changes cap shapes,
-        # so restore is manifest-driven (checkpoint.restore_flat) — the
-        # order tag rides along as bytes
-        return {"row": c.row, "col": c.col, "val": c.val, "nnz": c.nnz,
+        # GLOBAL COO only: nnz changes between iterations (pruning), so
+        # restore is manifest-driven (checkpoint.restore_flat), and global
+        # coordinates make the state mesh-independent — the order tag rides
+        # along as bytes
+        rows, cols, vals = c.to_global_coo()
+        return {"rows": rows, "cols": cols, "vals": vals,
                 "order": np.frombuffer(c.order.encode(), dtype=np.uint8),
                 "prev_sum": np.float64(prev_sum)}
 
     def unpack_state(state: dict):
-        order = bytes(np.asarray(state["order"])).decode()
-        c = shard_put(DistSpMat(
-            jnp.asarray(state["row"]), jnp.asarray(state["col"]),
-            jnp.asarray(state["val"]), jnp.asarray(state["nnz"]),
-            (n, n), a.grid, order=order), mesh)
+        tag = bytes(np.asarray(state["order"])).decode()
+        c = DistSpMat.from_global_coo(
+            (n, n), state["rows"], state["cols"], state["vals"],
+            ctx["grid"], mesh=ctx["mesh"],
+            order=tag if tag in ("row", "col") else "row")
         return c, float(state["prev_sum"])
 
     # loop body as a pure function of the flat state dict — the SAME body
     # runs bare and checkpointed, which is what makes resume bitwise-exact
     def body(it, state):
+        mesh2 = ctx["mesh"]
         c, prev_sum = unpack_state(state)
-        c2, _plan = spgemm_planned(c, c, ARITHMETIC, mesh=mesh,
+        c2, _plan = spgemm_planned(c, c, ARITHMETIC, mesh=mesh2,
                                    mask=expansion_mask,
                                    prod_cap=prod_cap, out_cap=out_cap)
         # inflation
         c2 = mat_apply_local(c2, lambda t: t.apply(lambda v: v ** inflation),
-                             mesh=mesh)
-        c2 = _normalize_cols(c2, mesh=mesh)
+                             mesh=mesh2)
+        c2 = _normalize_cols(c2, mesh=mesh2)
         # pruning
         c2 = mat_apply_local(
-            c2, lambda t: t.prune(lambda v: v > prune_threshold), mesh=mesh)
-        c2 = _normalize_cols(c2, mesh=mesh)
+            c2, lambda t: t.prune(lambda v: v > prune_threshold), mesh=mesh2)
+        c2 = _normalize_cols(c2, mesh=mesh2)
         chaos = float(mat_sum(mat_ewise_local(
-            c2, c2, lambda t1, t2: t1.apply(lambda v: v * v), mesh=mesh)))
+            c2, c2, lambda t1, t2: t1.apply(lambda v: v * v), mesh=mesh2)))
         done = (not np.isnan(prev_sum)) and abs(chaos - prev_sum) < tol
         return pack_state(c2, chaos), done
 
-    loop = CheckpointedLoop(checkpoint_dir, every=checkpoint_every)
+    on_topology = None
+    if elastic:
+        def on_topology(state, err):
+            q = max(ctx["grid"][0] // 2, 1)
+            ctx.update(mesh=make_grid(q, q), grid=(q, q))
+            return state  # global COO — unpack lands it on the new grid
+
+    loop = CheckpointedLoop(checkpoint_dir, every=checkpoint_every,
+                            watchdog=watchdog, on_topology=on_topology)
     state = loop.run(pack_state(c, np.nan), body, max_iters)
     c, _ = unpack_state(state)
+    mesh2 = ctx["mesh"]
     # clusters = connected components of the attractor pattern (symmetrized)
-    ct = mat_transpose(c, mesh=mesh)
-    from ..core.coo import COO
+    ct = mat_transpose(c, mesh=mesh2)
     from ..core import ewise_union
     sym = mat_ewise_local(
         c, ct, lambda t1, t2: ewise_union(t1, t2, ARITHMETIC.add,
-                                          cap=t1.cap), mesh=mesh)
-    return fastsv(sym, mesh=mesh)
+                                          cap=t1.cap), mesh=mesh2)
+    return fastsv(sym, mesh=mesh2)

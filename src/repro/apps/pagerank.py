@@ -10,17 +10,17 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from ..core import ARITHMETIC, DistSpMat, DistVec, spmv_iter
-from ..core.dist import shard_put
+from ..core.dist import make_grid
 from ..core.matops import mat_reduce, mat_scale_cols, vec_apply, vec_sum
 from ..core.plan import spmv_variant
-from ..core.spmv import transpose_layout
 from ..robust.recover import CheckpointedLoop
 
 
 def pagerank(a: DistSpMat, *, mesh: Mesh, alpha: float = 0.85,
              tol: float = 1e-8, max_iters: int = 100,
              checkpoint_dir: str | None = None,
-             checkpoint_every: int = 1) -> np.ndarray:
+             checkpoint_every: int = 1,
+             elastic: bool = False, watchdog=None) -> np.ndarray:
     """PageRank of the directed graph with edge u→v ⇔ entry (v, u) ≠ 0.
 
     (Build A from an edge list as A[dst, src] = 1, or pass mat_transpose of
@@ -29,42 +29,72 @@ def pagerank(a: DistSpMat, *, mesh: Mesh, alpha: float = 0.85,
     ``checkpoint_dir`` enables per-iteration checkpoint/resume
     (robust/recover.CheckpointedLoop): re-running after a crash with the
     same directory resumes from the last saved iteration and converges to
-    the bitwise-identical result of an uninterrupted run.
+    the bitwise-identical result of an uninterrupted run. The checkpointed
+    state is the *global* rank vector — mesh-independent, so a crashed run
+    can resume on a different (smaller) process grid.
+
+    ``elastic=True`` additionally survives an in-process TopologyError
+    (injected device loss, exhausted exchange deadlines): the loop
+    checkpoints, regrids the normalized matrix onto the next smaller square
+    grid, and re-runs the interrupted iteration there.
     """
     n = a.shape[0]
-    grid = a.grid
+    teleport = (1.0 - alpha) / n
+
+    # grid-dependent operands live in a rebuildable context so the elastic
+    # path can swap in a smaller grid mid-run
+    ctx: dict = {}
+
+    def setup(an: DistSpMat, dangling_g: np.ndarray, mesh2: Mesh):
+        grid2 = an.grid
+        ctx.update(
+            mesh=mesh2, grid=grid2, an=an,
+            dangling=DistVec.from_global(dangling_g, grid2, layout="col",
+                                         mesh=mesh2),
+            # planner rule: the local SpMV flavor whose sort the tiles
+            # already have is free
+            variant=spmv_variant(an))
+
     # out-degree of source vertices = column sums of A(dst, src)
     deg = mat_reduce(a, axis=0, add=ARITHMETIC.add, mesh=mesh)  # layout col
     inv = vec_apply(deg, lambda d: jnp.where(d > 0, 1.0 / jnp.maximum(d, 1e-30),
                                              0.0))
-    an = mat_scale_cols(a, inv, mesh=mesh)        # column-stochastic
-    valid = DistVec.from_global(np.ones(n, np.float32), grid, layout="col",
-                                mesh=mesh)        # 0 on padding tail
-    dangling_mask = DistVec(
-        (deg.data == 0).astype(jnp.float32) * valid.data, n, grid, "col")
-
-    r = DistVec.from_global(np.full(n, 1.0 / n, np.float32), grid,
-                            layout="col", mesh=mesh)
-    teleport = (1.0 - alpha) / n
-    # planner rule: pick the local SpMV flavor whose sort the tiles get free
-    variant = spmv_variant(an)
+    an0 = mat_scale_cols(a, inv, mesh=mesh)       # column-stochastic
+    # dangling indicator on the REAL vertices only (padding tail excluded)
+    dangling_g0 = (deg.to_global()[:n] == 0).astype(np.float32)
+    setup(an0, dangling_g0, mesh)
 
     # loop body as a pure function of the flat state dict — the SAME body
-    # runs bare and checkpointed, which is what makes resume bitwise-exact
+    # runs bare and checkpointed, which is what makes resume bitwise-exact.
+    # state["r"] is the GLOBAL (n,) rank vector: re-sharding it onto
+    # whatever grid ctx currently holds is what makes resume mesh-free.
     def body(it, state):
-        r = shard_put(DistVec(jnp.asarray(state["r"]), n, grid, "col"), mesh)
+        r_g = np.asarray(state["r"], np.float32)
+        grid2, mesh2 = ctx["grid"], ctx["mesh"]
+        r = DistVec.from_global(r_g, grid2, layout="col", mesh=mesh2)
         dangling = float(vec_sum(
-            DistVec(r.data * dangling_mask.data, n, grid, "col")))
-        r_new = spmv_iter(an, r, ARITHMETIC, mesh=mesh,   # back to 'col'
-                          variant=variant)
+            DistVec(r.data * ctx["dangling"].data, n, grid2, "col")))
+        r_new = spmv_iter(ctx["an"], r, ARITHMETIC, mesh=mesh2,  # to 'col'
+                          variant=ctx["variant"])
         add_const = teleport + alpha * dangling / n
         r_new = vec_apply(r_new, lambda x: alpha * x + add_const)
-        # zero the padding tail introduced by from_global rounding
-        delta = float(jnp.sum(jnp.abs(r_new.data - r.data)))
-        return {"r": r_new.data}, delta < tol
+        r_new_g = r_new.to_global()[:n]           # drops the padding tail
+        delta = float(np.abs(r_new_g - r_g).sum())
+        return {"r": r_new_g}, delta < tol
 
-    loop = CheckpointedLoop(checkpoint_dir, every=checkpoint_every)
-    state = loop.run({"r": r.data}, body, max_iters)
-    r = DistVec(jnp.asarray(state["r"]), n, grid, "col")
-    out = r.to_global()[:n]
+    on_topology = None
+    if elastic:
+        def on_topology(state, err):
+            q = max(ctx["grid"][0] // 2, 1)
+            new_mesh = make_grid(q, q)
+            # regrid the already-normalized matrix: entry values move
+            # bit-identically, no re-normalization drift
+            an2 = ctx["an"].regrid((q, q), mesh=new_mesh)
+            setup(an2, ctx["dangling"].to_global()[:n], new_mesh)
+            return state
+
+    loop = CheckpointedLoop(checkpoint_dir, every=checkpoint_every,
+                            watchdog=watchdog, on_topology=on_topology)
+    state = loop.run({"r": np.full(n, 1.0 / n, np.float32)}, body, max_iters)
+    out = np.asarray(state["r"], np.float32)
     return out / out.sum()

@@ -128,10 +128,17 @@ class DistSpMat:
     def from_global_coo(shape, rows, cols, vals, grid, *, mesh: Mesh = None,
                         cap: int | None = None, pad: float = 1.25,
                         random_permute: bool = False, seed: int = 0,
-                        vdims=()):
-        """Assemble from global int64 COO (host-side numpy)."""
+                        vdims=(), order: str = "row"):
+        """Assemble from global int64 COO (host-side numpy).
+
+        ``order`` picks the per-tile entry sort — ``'row'`` (the maintained
+        invariant) or ``'col'`` (so :meth:`regrid` can preserve a
+        col-ordered matrix's tag through re-assembly).
+        """
         M, N = shape
         pr, pc = grid
+        if order not in ("row", "col"):
+            raise ValueError(f"order must be 'row' or 'col', got {order!r}")
         rows = np.asarray(rows, np.int64)
         cols = np.asarray(cols, np.int64)
         vals = np.asarray(vals)
@@ -146,8 +153,9 @@ class DistSpMat:
         lr = (rows % mb).astype(np.int32)
         lc = (cols % nb).astype(np.int32)
         tid = ti * pc + tj
-        order = np.lexsort((lc, lr, tid))
-        tid, lr, lc, vals_s = tid[order], lr[order], lc[order], vals[order]
+        within_keys = (lc, lr) if order == "row" else (lr, lc)
+        perm = np.lexsort(within_keys + (tid,))
+        tid, lr, lc, vals_s = tid[perm], lr[perm], lc[perm], vals[perm]
         counts = np.bincount(tid, minlength=pr * pc)
         if cap is None:
             cap = max(8, int(math.ceil(counts.max() * pad / 8) * 8)) \
@@ -169,8 +177,8 @@ class DistSpMat:
             val=jnp.asarray(V.reshape((pr, pc, cap) + tuple(vdims))),
             nnz=jnp.asarray(counts.reshape(pr, pc).astype(np.int32)),
             shape=(int(M), int(N)), grid=(pr, pc),
-            # the lexsort above orders each tile by (lr, lc): row-major
-            order="row")
+            # the lexsort above sorted each tile by the requested key
+            order=order)
         out = _faults.corrupt_spmat("dist.assemble", out)
         _audit.audit_obj(out, "dist.assemble", min_level=_audit.FULL)
         if mesh is not None:
@@ -193,6 +201,23 @@ class DistSpMat:
                 vals.append(V[i, j, :k])
         return (np.concatenate(rows), np.concatenate(cols),
                 np.concatenate(vals))
+
+    def regrid(self, grid, *, mesh: Mesh = None, cap: int | None = None,
+               pad: float = 1.25) -> "DistSpMat":
+        """Re-distribute onto a new process grid (elastic shrink/grow).
+
+        Round-trips through global COO and the normal assembly path, so
+        entry values are bit-identical, the ``order`` tag is preserved
+        ('none' tightens to 'row' — assembly sorts anyway), and the tile
+        capacity is re-planned for the new tiling unless ``cap`` is given.
+        This is the topology-recovery primitive: a 4×4 grid that lost
+        devices regrids to 2×2 and every downstream op just works.
+        """
+        rows, cols, vals = self.to_global_coo()
+        tag = self.order if self.order in ("row", "col") else "row"
+        return DistSpMat.from_global_coo(
+            self.shape, rows, cols, vals, tuple(grid), mesh=mesh, cap=cap,
+            pad=pad, vdims=self.val.shape[3:], order=tag)
 
     def to_dense(self, zero=0.0) -> np.ndarray:
         r, c, v = self.to_global_coo()
@@ -354,6 +379,20 @@ class DistSpMat3D:
                     vals.append(V[l, i, j, :k])
         return (np.concatenate(rows), np.concatenate(cols),
                 np.concatenate(vals))
+
+    def regrid(self, grid, *, mesh: Mesh = None, cap: int | None = None,
+               pad: float = 1.25, dist: str | None = None) -> "DistSpMat3D":
+        """Re-distribute onto a new (L, q, q) grid (elastic shrink/grow).
+
+        The 3D analogue of :meth:`DistSpMat.regrid` — a replication-layer
+        loss regrids (4, q, q) → (2, q, q) through global COO and the
+        normal assembly path. ``dist`` defaults to the current
+        distribution style; capacity is re-planned unless ``cap`` is given.
+        """
+        rows, cols, vals = self.to_global_coo()
+        return DistSpMat3D.from_global_coo(
+            self.shape, rows, cols, vals, tuple(grid), dist or self.dist,
+            mesh=mesh, cap=cap, pad=pad)
 
     def to_dense(self, zero=0.0) -> np.ndarray:
         r, c, v = self.to_global_coo()
@@ -547,3 +586,58 @@ def shard_put(obj, mesh: Mesh):
                 getattr(obj, f.name),
                 NamedSharding(mesh, getattr(spec_tree, f.name)))
     return dataclasses.replace(obj, **kw)
+
+
+# --------------------------------------------------------------------------
+# mesh-independent sparse checkpoints (elastic topology recovery)
+# --------------------------------------------------------------------------
+
+def save_spmat(ckpt_dir: str, step: int, m, *, keep: int = 3) -> str:
+    """Checkpoint a DistSpMat/DistSpMat3D through the CRC-manifest path.
+
+    The matrix is saved as *global COO* plus metadata — not as grid-shaped
+    tiles — so :func:`restore_spmat` can re-assemble it onto ANY grid
+    (including a smaller one after device loss). Rides the atomic-rename +
+    per-leaf CRC32 + fallback-to-previous-step machinery of
+    ``train/checkpoint.py`` unchanged.
+    """
+    from ..train.checkpoint import save_checkpoint   # lazy: train is heavy
+    rows, cols, vals = m.to_global_coo()
+    tree = {"rows": rows, "cols": cols, "vals": vals,
+            "shape": np.asarray(m.shape, np.int64),
+            "order": np.frombuffer(m.order.encode(), np.uint8),
+            "kind": np.frombuffer(type(m).__name__.encode(), np.uint8)}
+    if isinstance(m, DistSpMat3D):
+        tree["dist"] = np.frombuffer(m.dist.encode(), np.uint8)
+    return save_checkpoint(ckpt_dir, step, tree, keep=keep)
+
+
+def restore_spmat(ckpt_dir: str, grid, *, mesh: Mesh = None,
+                  step: int | None = None, cap: int | None = None,
+                  pad: float = 1.25, dist: str | None = None):
+    """Restore a sparse checkpoint onto ``grid`` (any shape); returns
+    ``(matrix, step)``.
+
+    The target ``grid`` chooses the container family: a 2-tuple rebuilds a
+    :class:`DistSpMat`, a 3-tuple a :class:`DistSpMat3D` (``dist`` defaults
+    to the saved distribution style). Capacity is re-planned for the target
+    tiling and the saved ``order`` tag is preserved — the regrid-on-resume
+    half of elastic recovery.
+    """
+    from ..train.checkpoint import restore_flat      # lazy: train is heavy
+    state, step = restore_flat(ckpt_dir, step)
+    shape = tuple(int(x) for x in np.asarray(state["shape"]))
+    saved_order = bytes(np.asarray(state["order"])).decode()
+    tag = saved_order if saved_order in ("row", "col") else "row"
+    grid = tuple(int(g) for g in grid)
+    if len(grid) == 3:
+        d = dist or bytes(np.asarray(state["dist"])).decode()
+        m = DistSpMat3D.from_global_coo(
+            shape, state["rows"], state["cols"], state["vals"], grid, d,
+            mesh=mesh, cap=cap, pad=pad)
+    else:
+        vals = np.asarray(state["vals"])
+        m = DistSpMat.from_global_coo(
+            shape, state["rows"], state["cols"], vals, grid, mesh=mesh,
+            cap=cap, pad=pad, vdims=vals.shape[1:], order=tag)
+    return m, step

@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..robust import audit as _audit, faults as _faults, recover as _recover
+from ..robust import (audit as _audit, deadline as _deadline,
+                      faults as _faults, recover as _recover)
 from .coo import COO
 from .dist import DistSpMat, DistSpVec
 from .local_spgemm import compression_ratio, spgemm_flops
@@ -288,18 +289,35 @@ def spgemm(a: DistSpMat, b: DistSpMat | None = None,
                                compress=p.compress)
         except _audit.AuditError as err:
             audit_fails += 1
+            timeout = isinstance(err, _deadline.ExchangeTimeout)
             if audit_fails <= MAX_AUDIT_RETRIES:
                 warnings.warn(
                     f"SpGEMM attempt {p.attempts} failed audit at "
                     f"{err.site}: {err} — retrying from pristine inputs "
                     f"({audit_fails}/{MAX_AUDIT_RETRIES})",
                     RuntimeWarning, stacklevel=2)
+                if timeout:
+                    # a deadline trip means a straggling peer, not a flipped
+                    # bit — give the topology time to heal before hammering
+                    # the same exchange (deterministic seeded backoff)
+                    _deadline.backoff_sleep(err.site, audit_fails)
                 p = dataclasses.replace(p, attempts=p.attempts + 1)
                 continue
             rung = _recover.next_rung(p, cur_mask, kind="spgemm")
             if rung is None:
+                if timeout:
+                    raise _deadline.TopologyError(
+                        f"SpGEMM exchange at {err.site} still over deadline "
+                        f"after {p.attempts} attempts with the degradation "
+                        f"ladder exhausted (degraded={p.degraded}) — the "
+                        "topology, not the data, is at fault", err.site) \
+                        from err
                 raise
             p = _recover.apply_rung(rung, p)
+            if timeout:
+                # the shed schedule's exchanges have different timing: the
+                # old trailing-median budget would trip spuriously
+                _deadline.reset(err.site)
             p, cur_mask, post_mask = _spgemm_take_rung(
                 rung, p, a, b, safety, cur_mask, post_mask)
             continue
@@ -344,6 +362,40 @@ def _spgemm_take_rung(rung, p, a, b, safety, cur_mask, post_mask):
         prod_ceiling=max(p.prod_ceiling, fresh.prod_ceiling),
         out_ceiling=max(p.out_ceiling, fresh.out_ceiling))
     return p, None, cur_mask
+
+
+def demote_stage(plan: SpGEMMPlan, stage: int, q: int) -> SpGEMMPlan:
+    """Re-plan the hybrid schedule away from a persistently slow stage.
+
+    The watchdog's straggler signal names an iteration, and the caller maps
+    it to the exchange stage whose peer keeps lagging; demoting that stage
+    from the per-stage broadcast to the batched ``'gather'`` leg takes its
+    broadcast off the critical path (the gather stages exchange eagerly in
+    one fused all-to-all up front — §4.8 hybrid schedule). The elastic
+    ``CheckpointedLoop``'s ``on_straggler`` hook is the intended caller.
+
+    Whole-sweep schedules (``rotate``/``alltoall``/None) first expand to the
+    per-stage ``('bcast',) * q`` form; the result is always a length-``q``
+    tuple schedule with ``variant='hybrid'``, recorded in ``plan.degraded``
+    as ``demote-stage:<k>`` so degraded runs stay diagnosable.
+    """
+    if not 0 <= stage < q:
+        raise ValueError(f"stage {stage} outside [0, q={q})")
+    s = plan.schedule
+    base = tuple(s) if isinstance(s, (tuple, list)) else ("bcast",) * q
+    if len(base) != q:
+        raise ValueError(
+            f"plan schedule has {len(base)} stages, expected q={q}")
+    if base[stage] == "gather":
+        return plan                       # already off the broadcast path
+    warnings.warn(
+        f"robust: demoting exchange stage {stage} to the batched 'gather' "
+        f"leg (persistent straggler; schedule was {s!r})",
+        RuntimeWarning, stacklevel=2)
+    sched = base[:stage] + ("gather",) + base[stage + 1:]
+    return dataclasses.replace(
+        plan, schedule=sched, variant="hybrid",
+        degraded=tuple(plan.degraded) + (f"demote-stage:{stage}",))
 
 
 # --------------------------------------------------------------------------
@@ -487,18 +539,29 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring, *, mesh,
                                out_cap=p.out_cap, mask=cur_mask)
         except _audit.AuditError as err:
             audit_fails += 1
+            timeout = isinstance(err, _deadline.ExchangeTimeout)
             if audit_fails <= MAX_AUDIT_RETRIES:
                 warnings.warn(
                     f"SpMSpV attempt {p.attempts} failed audit at "
                     f"{err.site}: {err} — retrying from pristine inputs "
                     f"({audit_fails}/{MAX_AUDIT_RETRIES})",
                     RuntimeWarning, stacklevel=2)
+                if timeout:
+                    _deadline.backoff_sleep(err.site, audit_fails)
                 p = dataclasses.replace(p, attempts=p.attempts + 1)
                 continue
             rung = _recover.next_rung(p, cur_mask, kind="spmspv")
             if rung is None:
+                if timeout:
+                    raise _deadline.TopologyError(
+                        f"SpMSpV exchange at {err.site} still over deadline "
+                        f"after {p.attempts} attempts with the degradation "
+                        f"ladder exhausted (degraded={p.degraded})",
+                        err.site) from err
                 raise
             p = _recover.apply_rung(rung, p)
+            if timeout:
+                _deadline.reset(err.site)
             p, cur_mask, post_mask = _spmspv_take_rung(
                 rung, p, a, x, safety, sr, cur_mask, post_mask)
             continue

@@ -49,6 +49,19 @@ class StepWatchdog:
     def start(self):
         self._t0 = time.monotonic()
 
+    def reset(self):
+        """Forget trailing step times (back into warmup).
+
+        Call on any topology or plan change — a regrid onto a smaller mesh
+        or a re-planned exchange schedule changes per-step wall time, so a
+        budget computed from the old configuration's trailing median would
+        either flag every post-change step or mask a real straggler.
+        ``robust/recover.CheckpointedLoop`` calls this after its
+        ``on_topology``/``on_straggler`` hooks run.
+        """
+        self.times.clear()
+        self._t0 = None
+
     def stop(self) -> float:
         dt = time.monotonic() - self._t0
         self.times.append(dt)

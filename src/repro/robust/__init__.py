@@ -4,16 +4,22 @@
   (``REPRO_FAULTS`` env / :func:`faults.inject`) at named sites.
 - :mod:`repro.robust.audit`   — tiered invariant auditor (``REPRO_AUDIT``)
   + checksum bracketing of communication stages.
-- :mod:`repro.robust.recover` — degradation ladder and
+- :mod:`repro.robust.deadline` — wall-time exchange deadlines
+  (``REPRO_DEADLINE``), seeded retry backoff, and topology errors — the
+  tier that catches hung collectives and dead devices.
+- :mod:`repro.robust.recover` — degradation ladder and the elastic
   :class:`~repro.robust.recover.CheckpointedLoop`.
 
-``faults``/``audit`` are import-light (stdlib + numpy) so ``repro.core``
-modules can hook them at module scope; ``recover`` lazy-imports core.
+``faults``/``audit``/``deadline`` are import-light (stdlib + numpy) so
+``repro.core`` modules can hook them at module scope; ``recover``
+lazy-imports core.
 """
-from . import audit, faults, recover
+from . import audit, deadline, faults, recover
 from .audit import AuditError
+from .deadline import ExchangeGuard, ExchangeTimeout, TopologyError
 from .faults import InjectedCrash
 from .recover import LADDER, CheckpointedLoop
 
-__all__ = ["audit", "faults", "recover", "AuditError", "InjectedCrash",
-           "LADDER", "CheckpointedLoop"]
+__all__ = ["audit", "deadline", "faults", "recover", "AuditError",
+           "ExchangeGuard", "ExchangeTimeout", "TopologyError",
+           "InjectedCrash", "LADDER", "CheckpointedLoop"]

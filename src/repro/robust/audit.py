@@ -210,21 +210,29 @@ def guard_exchange(site: str, obj):
     corruption — jax arrays are immutable, so corrupting the operand at the
     boundary IS the wire model) → checksum(post); mismatch raises
     :class:`AuditError`. At audit level off the fault passes through
-    undetected (the documented trade); with nothing armed and auditing off
-    this is two boolean reads.
+    undetected (the documented trade); with nothing armed, auditing off and
+    the deadline guard disabled this is three boolean reads.
+
+    The whole bracket additionally runs under the wall-time deadline of
+    ``robust/deadline.ExchangeGuard`` (the topology tier): a hung or
+    straggling exchange — provoked deterministically by a ``delay`` fault
+    at ``dist.exchange_deadline``, which sleeps inside the timed region —
+    raises :class:`~repro.robust.deadline.ExchangeTimeout` instead of
+    blocking forever.
     """
-    from . import faults
+    from . import deadline, faults
     f_on = faults.enabled()
     lvl = level()
-    if not f_on and lvl < BOUNDARY:
+    if not f_on and lvl < BOUNDARY and not deadline.enabled():
         return obj
-    pre = checksum_obj(obj) if lvl >= BOUNDARY else None
-    if f_on:
-        obj = faults.corrupt_obj(site, obj)
-    if pre is not None:
-        post = checksum_obj(obj)
-        if post != pre:
-            raise AuditError(
-                f"{site}: packed-key/value checksum mismatch across "
-                f"exchange ({pre:#010x} -> {post:#010x})", site)
+    with deadline.watch(site):
+        pre = checksum_obj(obj) if lvl >= BOUNDARY else None
+        if f_on:
+            obj = faults.corrupt_obj(site, obj)
+        if pre is not None:
+            post = checksum_obj(obj)
+            if post != pre:
+                raise AuditError(
+                    f"{site}: packed-key/value checksum mismatch across "
+                    f"exchange ({pre:#010x} -> {post:#010x})", site)
     return obj

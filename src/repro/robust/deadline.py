@@ -1,0 +1,259 @@
+"""Wall-time exchange deadlines, seeded retry backoff, topology errors.
+
+The fault/audit subsystem (PR 5/6) recovers from *data* faults — corrupted
+payloads caught by checksum brackets. This module adds the *topology* tier:
+a hung collective or a persistently straggling peer produces no checksum
+mismatch at all; today it would block the run forever. The
+:class:`ExchangeGuard` wraps the same comm boundaries that
+``audit.guard_exchange`` already brackets and gives each site a wall-time
+deadline learned from a trailing-median model (generalizing
+``launch/elastic.StepWatchdog`` from per-step to per-site):
+
+  * **Warmup.** With fewer than ``min_samples`` recorded exchanges at a
+    site, the budget is the flat ``startup_deadline`` (default 60 s) — a
+    collective that hangs on the very first exchange still fails in bounded
+    time instead of the 6-hour CI default.
+  * **Steady state.** Budget = ``max(floor, grace × trailing median)``.
+    The floor keeps a fast site (median in the microseconds) from tripping
+    on an unrelated host hiccup.
+  * **Escalation** is owned by the planner retry loops (core/plan.py):
+    an :class:`ExchangeTimeout` (an ``AuditError`` subclass, so the
+    existing retry machinery sees it) is retried from pristine inputs with
+    deterministic seeded exponential backoff, then shed to the
+    ``serial-schedule`` ladder rung, and only when the ladder is exhausted
+    escalates to :class:`TopologyError` — the signal the elastic
+    ``CheckpointedLoop`` turns into checkpoint → regrid → continue.
+
+Determinism: backoff delays are drawn from ``numpy.random.default_rng``
+keyed on (``REPRO_FAULT_SEED``, site, attempt) — the same chaos run
+backs off identically. Stragglers are provoked on demand through the
+``dist.exchange_deadline`` fault site (a ``delay`` fault armed there
+sleeps inside the timed region of whichever guarded exchange runs next).
+
+Like the rest of ``repro.robust``, this module imports nothing from
+``repro.core`` (core imports us).
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import time
+import warnings
+import zlib
+from collections import deque
+
+import numpy as np
+
+from . import faults
+from .audit import AuditError
+
+# Fault site whose armed ``delay`` fires inside the timed region of the
+# next guarded exchange — the deterministic stand-in for a hung collective.
+DELAY_SITE = "dist.exchange_deadline"
+
+
+class TopologyError(RuntimeError):
+    """The process topology is no longer serviceable at a named site.
+
+    Raised when the degradation ladder is exhausted under a persistent
+    exchange deadline, or by an injected ``loop.device_loss`` fault. The
+    elastic ``CheckpointedLoop`` responds by checkpointing and regridding
+    onto a smaller process grid.
+    """
+
+    def __init__(self, msg: str, site: str = "?"):
+        super().__init__(msg)
+        self.site = site
+
+
+class ExchangeTimeout(AuditError):
+    """A guarded exchange exceeded its wall-time budget.
+
+    Subclasses :class:`AuditError` so the planner retry loops treat a
+    deadline trip exactly like a failed checksum — retry from pristine
+    inputs — while ``isinstance`` checks can still tell the two apart
+    (timeouts additionally back off and escalate to TopologyError).
+    """
+
+    def __init__(self, site: str, elapsed: float, budget: float):
+        super().__init__(
+            f"{site}: exchange exceeded wall-time deadline "
+            f"({elapsed:.3f}s > budget {budget:.3f}s)", site)
+        self.elapsed = elapsed
+        self.budget_s = budget
+
+
+class ExchangeGuard:
+    """Per-site wall-time deadlines from a trailing-median model."""
+
+    def __init__(self, *, grace: float = 4.0, window: int = 32,
+                 min_samples: int = 5, floor: float = 1.0,
+                 startup_deadline: float = 60.0,
+                 backoff_base: float = 0.05, backoff_cap: float = 5.0,
+                 max_retries: int = 3):
+        self.grace = grace
+        self.window = window
+        self.min_samples = min_samples
+        self.floor = floor
+        self.startup_deadline = startup_deadline
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.max_retries = max_retries
+        self._times: dict[str, deque] = {}
+
+    def budget(self, site: str) -> float:
+        """Current wall-time budget for one exchange at ``site``."""
+        ts = self._times.get(site)
+        if ts is None or len(ts) < self.min_samples:
+            return self.startup_deadline
+        med = sorted(ts)[len(ts) // 2]
+        return max(self.floor, med * self.grace)
+
+    def record(self, site: str, dt: float):
+        self._times.setdefault(site, deque(maxlen=self.window)).append(dt)
+
+    def samples(self, site: str) -> int:
+        return len(self._times.get(site, ()))
+
+    def reset(self, site: str | None = None):
+        """Forget trailing times — for all sites or one.
+
+        Called after a topology change or a schedule-ladder descent: the
+        new configuration's exchanges have different timing, so budgets
+        learned from the old one would either mask a regression or trip
+        spuriously.
+        """
+        if site is None:
+            self._times.clear()
+        else:
+            self._times.pop(site, None)
+
+    @contextlib.contextmanager
+    def watch(self, site: str):
+        """Time one exchange at ``site``; raise ExchangeTimeout over budget.
+
+        The ``dist.exchange_deadline`` delay fault fires *inside* the timed
+        region, so an armed straggler is seen exactly as a slow wire would
+        be. Tripped times are NOT recorded — a straggler must not poison
+        the trailing median it is judged against.
+        """
+        t0 = time.monotonic()
+        faults.maybe_delay(DELAY_SITE)
+        yield
+        dt = time.monotonic() - t0
+        b = self.budget(site)
+        if dt > b:
+            raise ExchangeTimeout(site, dt, b)
+        self.record(site, dt)
+
+    def backoff_delay(self, site: str, attempt: int) -> float:
+        """Deterministic seeded exponential backoff before retry ``attempt``.
+
+        ``min(cap, base·2^(attempt-1))`` jittered to 50–150 % by an rng
+        keyed on (global fault seed, site, attempt) — reproducible under a
+        pinned ``REPRO_FAULT_SEED``, decorrelated across sites.
+        """
+        rng = np.random.default_rng(
+            faults.global_seed() ^ zlib.crc32(site.encode())
+            ^ (int(attempt) << 20))
+        base = min(self.backoff_cap, self.backoff_base * 2 ** (attempt - 1))
+        return base * (0.5 + float(rng.random()))
+
+
+# --------------------------------------------------------------------------
+# module-level default guard (what audit.guard_exchange and plan.py use)
+# --------------------------------------------------------------------------
+
+_GUARD: ExchangeGuard | None = None
+_env_checked = False
+
+
+def _default_guard() -> ExchangeGuard | None:
+    """Build the guard from the environment on first use.
+
+    ``REPRO_DEADLINE=off`` disables deadline enforcement entirely (the
+    delay fault site still fires); a float value overrides
+    ``startup_deadline``; unset/``auto`` uses the defaults.
+    """
+    global _GUARD, _env_checked
+    if not _env_checked:
+        _env_checked = True
+        spec = os.environ.get("REPRO_DEADLINE", "auto").strip().lower()
+        if spec == "off":
+            _GUARD = None
+        elif spec in ("", "auto"):
+            _GUARD = ExchangeGuard()
+        else:
+            _GUARD = ExchangeGuard(startup_deadline=float(spec))
+    return _GUARD
+
+
+def active_guard() -> ExchangeGuard | None:
+    return _default_guard()
+
+
+def enabled() -> bool:
+    return _default_guard() is not None
+
+
+@contextlib.contextmanager
+def configure(**kw):
+    """Scoped override guard: ``with deadline.configure(floor=0.05): ...``.
+
+    Installs a fresh :class:`ExchangeGuard` built with ``kw`` for the scope
+    (tests, chaos runs); the previous guard — and its learned budgets — is
+    restored on exit. ``configure(off=True)`` disables enforcement.
+    """
+    global _GUARD, _env_checked
+    _default_guard()
+    prev = _GUARD
+    _GUARD = None if kw.pop("off", False) else ExchangeGuard(**kw)
+    try:
+        yield _GUARD
+    finally:
+        _GUARD = prev
+
+
+@contextlib.contextmanager
+def watch(site: str):
+    """Module-level watch using the active guard (no-op timing when off)."""
+    g = _default_guard()
+    if g is None:
+        # enforcement off: still fire any armed straggler fault so chaos
+        # specs behave identically with and without the guard
+        faults.maybe_delay(DELAY_SITE)
+        yield
+        return
+    with g.watch(site):
+        yield
+
+
+def reset(site: str | None = None):
+    g = _default_guard()
+    if g is not None:
+        g.reset(site)
+
+
+def backoff_sleep(site: str, attempt: int):
+    """Warn + sleep the deterministic backoff before retry ``attempt``."""
+    g = _default_guard()
+    if g is None:
+        return
+    d = g.backoff_delay(site, attempt)
+    warnings.warn(
+        f"robust: exchange deadline at {site} — backing off {d * 1e3:.1f}ms "
+        f"before retry {attempt}", RuntimeWarning, stacklevel=3)
+    time.sleep(d)
+
+
+def maybe_device_loss(site: str = "loop.device_loss"):
+    """Raise :class:`TopologyError` when a fault fires at ``site``.
+
+    Any fault kind armed at the site triggers the loss — ``crash`` is the
+    conventional spec (``loop.device_loss:crash:at=4``). This models the
+    runtime noticing a peer is gone at an iteration boundary.
+    """
+    f = faults.fire(site)
+    if f is not None:
+        raise TopologyError(
+            f"injected device loss at {site} (hit {f.hits})", site)

@@ -70,6 +70,11 @@ KNOWN_SITES = {
     "io.bin_body": "binary-format body byte stream after write",
     "loop.crash": "iterative app: hard crash at iteration start",
     "loop.delay": "iterative app: straggler delay inside an iteration",
+    "dist.exchange_deadline": "hung/straggling collective: delay inside the "
+                              "timed region of a guarded exchange "
+                              "(robust/deadline.ExchangeGuard)",
+    "loop.device_loss": "iterative app: device/node loss at iteration start "
+                        "(TopologyError -> checkpoint, regrid, continue)",
 }
 
 

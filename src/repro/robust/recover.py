@@ -48,6 +48,7 @@ import warnings
 import numpy as np
 
 from . import faults
+from .deadline import TopologyError, maybe_device_loss
 
 LADDER = ("serial-schedule", "postfilter", "sort-merge", "legacy-dedup",
           "pure-jax-segreduce")
@@ -193,16 +194,44 @@ class CheckpointedLoop:
     the bare run.
 
     Fault sites: ``loop.crash`` (InjectedCrash at iteration start, before
-    any state mutation) and ``loop.delay`` (straggler sleep; flagged through
-    the optional ``launch.elastic.StepWatchdog``).
+    any state mutation), ``loop.delay`` (straggler sleep; flagged through
+    the optional ``launch.elastic.StepWatchdog``) and ``loop.device_loss``
+    (TopologyError at iteration start — the elastic path below).
+
+    **Elastic topology recovery.** A :class:`TopologyError` — injected
+    device loss, or a planned multiply whose degradation ladder was
+    exhausted under a persistent exchange deadline — is caught at the
+    iteration boundary: the last completed state is checkpointed, then
+
+      * with an ``on_topology(state, err) -> state`` hook, the hook regrids
+        (rebuild the mesh, ``DistSpMat.regrid`` onto the smaller grid,
+        re-derive grid-shaped scratch) and the SAME iteration re-runs on
+        the new topology — the watchdog is reset so old-grid step times
+        don't poison the new budget;
+      * without a hook the error propagates — a supervisor restarts the
+        process under a smaller ``REPRO_DEVICES`` and ``resume()`` picks up
+        from the checkpoint (state dicts are mesh-independent global
+        arrays, so restoring onto any grid just works).
+
+    Persistent stragglers get the same treatment one tier down: after
+    ``straggler_patience`` consecutive over-budget iterations, the optional
+    ``on_straggler(it, elapsed)`` hook fires (re-plan the hybrid exchange
+    schedule away from the slow stage — ``core/plan.demote_stage``) and the
+    watchdog is reset to learn the re-planned timing.
     """
 
     def __init__(self, ckpt_dir: str | None = None, *, every: int = 1,
-                 keep: int = 3, watchdog=None):
+                 keep: int = 3, watchdog=None, on_topology=None,
+                 max_topology_events: int = 2, on_straggler=None,
+                 straggler_patience: int = 3):
         self.ckpt_dir = ckpt_dir
         self.every = max(int(every), 1)
         self.keep = keep
         self.watchdog = watchdog
+        self.on_topology = on_topology
+        self.max_topology_events = max_topology_events
+        self.on_straggler = on_straggler
+        self.straggler_patience = max(int(straggler_patience), 1)
 
     def resume(self, state: dict):
         """(start_iteration, state): restored when a checkpoint exists."""
@@ -227,12 +256,36 @@ class CheckpointedLoop:
         if start < 0:                       # checkpointed run already done
             return state
         wd = self.watchdog
-        for it in range(start, max_iters):
+        topo_events = 0
+        straggles = 0
+        it = start
+        while it < max_iters:
             faults.maybe_crash("loop.crash")
-            if wd is not None:
-                wd.start()
-            faults.maybe_delay("loop.delay")
-            state, done = body(it, state)
+            try:
+                maybe_device_loss("loop.device_loss")
+                if wd is not None:
+                    wd.start()
+                faults.maybe_delay("loop.delay")
+                state, done = body(it, state)
+            except TopologyError as err:
+                # `state` is the last COMPLETED iteration's output — save
+                # it (step it-1) so a restarted process resumes by redoing
+                # exactly the interrupted iteration, never skipping it
+                if self.ckpt_dir and it > 0:
+                    self._save(it - 1, state, False)
+                topo_events += 1
+                if self.on_topology is None \
+                        or topo_events > self.max_topology_events:
+                    raise
+                warnings.warn(
+                    f"robust: topology fault at iteration {it} ({err}) — "
+                    f"checkpointed, regridding via on_topology "
+                    f"({topo_events}/{self.max_topology_events})",
+                    RuntimeWarning, stacklevel=2)
+                state = self.on_topology(state, err)
+                if wd is not None:
+                    wd.reset()              # old-grid step times are stale
+                continue                    # re-run the SAME iteration
             if wd is not None:
                 dt = wd.stop()
                 if wd.is_straggling(dt):
@@ -240,9 +293,23 @@ class CheckpointedLoop:
                         f"robust: iteration {it} straggling "
                         f"({dt:.3f}s > budget {wd.budget():.3f}s)",
                         RuntimeWarning, stacklevel=2)
+                    straggles += 1
+                    if self.on_straggler is not None \
+                            and straggles >= self.straggler_patience:
+                        warnings.warn(
+                            f"robust: {straggles} consecutive straggling "
+                            "iterations — invoking on_straggler to re-plan "
+                            "around the slow stage", RuntimeWarning,
+                            stacklevel=2)
+                        self.on_straggler(it, dt)
+                        wd.reset()          # learn the re-planned timing
+                        straggles = 0
+                else:
+                    straggles = 0
             if self.ckpt_dir and (done or (it + 1) % self.every == 0
                                   or it + 1 == max_iters):
                 self._save(it, state, bool(done))
             if done:
                 break
+            it += 1
         return state

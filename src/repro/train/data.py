@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
+import warnings
 from typing import Iterator
 
 import jax
@@ -87,15 +89,36 @@ class Prefetcher:
                         "Prefetcher worker thread died without queuing a "
                         "batch or recording an exception")
 
-    def close(self):
+    def close(self, timeout: float = 5.0) -> bool:
+        """Stop and join the worker; returns True when it actually exited.
+
+        Draining once then joining isn't enough: the worker can re-fill the
+        queue between the drain and its next ``put`` (the old behavior
+        silently leaked the thread on join timeout). Keep draining while
+        joining so a put()-blocked worker always sees the stop flag, and
+        warn loudly if the thread is still alive at the deadline (a worker
+        stuck inside ``source.batch_at`` — daemonized, so it won't block
+        interpreter exit, but it still holds the source).
+        """
         self._stop.set()
-        # drain so a put()-blocked worker sees the stop flag promptly
-        try:
-            while True:
-                self.q.get_nowait()
-        except queue.Empty:
-            pass
-        self.t.join(timeout=5.0)
+        deadline = time.monotonic() + timeout
+        while self.t.is_alive() and time.monotonic() < deadline:
+            # drain so a put()-blocked worker sees the stop flag promptly
+            try:
+                while True:
+                    self.q.get_nowait()
+            except queue.Empty:
+                pass
+            self.t.join(timeout=0.05)
+        if self.t.is_alive():
+            warnings.warn(
+                f"Prefetcher.close(): worker thread still alive after "
+                f"{timeout:.1f}s — it is likely blocked inside "
+                "source.batch_at. The daemon thread will not block exit, "
+                "but it may keep consuming the source.",
+                RuntimeWarning, stacklevel=2)
+            return False
+        return True
 
 
 def make_batch_specs(cfg, shape: dict, plan=None):

@@ -1,0 +1,158 @@
+"""Crash-and-shrink elastic recovery scenario (subprocess harness).
+
+Proves the mesh-independent checkpoint + regrid story end to end, for
+PageRank and FastSV:
+
+  baseline   REPRO_DEVICES=4 (1x1 grid): uninterrupted run, result saved.
+  crash      REPRO_DEVICES=8 (2x2 grid): ``loop.device_loss:crash:at=K``
+             raises TopologyError mid-run; CheckpointedLoop saves the last
+             completed iteration and the process dies (prints CRASHED).
+  resume     REPRO_DEVICES=4 (1x1 grid): same checkpoint dir — restores the
+             global state onto the SMALLER grid and finishes. Result must be
+             bitwise-equal to baseline (prints "PASS resume:<app>").
+  live       REPRO_DEVICES=8, ``elastic=True``: the same injected device
+             loss is survived in-process — checkpoint, regrid 2x2 -> 1x1,
+             re-run the interrupted iteration, continue. Bitwise vs
+             baseline again (prints "PASS live:<app>").
+  all        orchestrates the four as subprocesses for both apps.
+
+Grid policy: q = isqrt(ndev // 2) — the largest square grid that leaves 2x
+hot-spare headroom (8 devices -> 2x2, 4 -> 1x1), so the 8 -> 4 shrink is a
+genuine grid change.
+
+Bitwise-across-grids is engineered per app: FastSV is exact int32 min
+arithmetic (grid-invariant by construction); the PageRank instance uses a
+graph where every out-degree is exactly 2, alpha=0.5 and n=32, so every
+value in the iteration is a dyadic float32 and each row sum has exactly two
+addends — no rounding anywhere, on any grid.
+"""
+import os
+import subprocess
+import sys
+
+N_DEV = int(os.environ.get("REPRO_DEVICES", "4"))
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N_DEV}"
+
+import numpy as np                                            # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+N_PR = 32      # pagerank vertices
+N_SV = 64      # fastsv vertices (two 32-vertex path components)
+CRASH_AT = 4   # device loss on the 4th loop entry (iteration index 3)
+
+
+def grid_for(ndev: int) -> int:
+    from math import isqrt
+    return max(isqrt(ndev // 2), 1)
+
+
+def build_pagerank(q: int):
+    """A[dst, src]: src i -> (i+1)%n and (i+17)%n. Out-degree exactly 2."""
+    from repro.core import DistSpMat, make_grid
+    n = N_PR
+    src = np.repeat(np.arange(n, dtype=np.int64), 2)
+    dst = np.empty(2 * n, np.int64)
+    dst[0::2] = (np.arange(n) + 1) % n
+    dst[1::2] = (np.arange(n) + 17) % n
+    mesh = make_grid(q, q)
+    a = DistSpMat.from_global_coo((n, n), dst, src,
+                                  np.ones(2 * n, np.float32), (q, q),
+                                  mesh=mesh, cap=1024)
+    return a, mesh
+
+
+def build_fastsv(q: int):
+    """Symmetric: path 0..31 plus path 32..63 (two components)."""
+    from repro.core import DistSpMat, make_grid
+    n = N_SV
+    r = []
+    for lo in (0, 32):
+        for i in range(lo, lo + 31):
+            r.append((i, i + 1))
+            r.append((i + 1, i))
+    rows = np.array([e[0] for e in r], np.int64)
+    cols = np.array([e[1] for e in r], np.int64)
+    mesh = make_grid(q, q)
+    a = DistSpMat.from_global_coo((n, n), rows, cols,
+                                  np.ones(len(r), np.float32), (q, q),
+                                  mesh=mesh, cap=1024)
+    return a, mesh
+
+
+def run_app(app: str, q: int, ckpt: str | None, elastic: bool) -> np.ndarray:
+    if app == "pagerank":
+        from repro.apps import pagerank
+        a, mesh = build_pagerank(q)
+        # tol=0.0 -> fixed 6 iterations; alpha=0.5 keeps every constant
+        # dyadic (teleport = 1/64, r0 = 1/32)
+        return pagerank(a, mesh=mesh, alpha=0.5, tol=0.0, max_iters=6,
+                        checkpoint_dir=ckpt, elastic=elastic)
+    from repro.apps import fastsv
+    a, mesh = build_fastsv(q)
+    return fastsv(a, mesh=mesh, max_iters=16, checkpoint_dir=ckpt,
+                  elastic=elastic)
+
+
+def main(mode: str, tmp: str, app: str = "pagerank"):
+    if mode == "all":
+        return orchestrate(tmp)
+    from repro.robust.deadline import TopologyError
+    q = grid_for(N_DEV)
+    ckpt = os.path.join(tmp, f"ck_{app}")
+    out_path = os.path.join(tmp, f"{app}_{mode}.npy")
+    if mode == "baseline":
+        np.save(out_path, run_app(app, q, None, False))
+        print(f"PASS baseline:{app}")
+    elif mode == "crash":
+        try:
+            run_app(app, q, ckpt, False)
+        except TopologyError as err:
+            print(f"CRASHED {app} ({err})")
+            return
+        raise SystemExit(f"crash mode finished without TopologyError ({app})")
+    elif mode == "resume":
+        got = run_app(app, q, ckpt, False)
+        ref = np.load(os.path.join(tmp, f"{app}_baseline.npy"))
+        np.testing.assert_array_equal(got, ref)
+        print(f"PASS resume:{app}")
+    elif mode == "live":
+        got = run_app(app, q, None, True)
+        ref = np.load(os.path.join(tmp, f"{app}_baseline.npy"))
+        np.testing.assert_array_equal(got, ref)
+        print(f"PASS live:{app}")
+    else:
+        raise SystemExit(f"unknown mode {mode!r}")
+
+
+def orchestrate(tmp: str):
+    """Run the full crash-and-shrink story for both apps as subprocesses."""
+    me = os.path.abspath(__file__)
+
+    def sub(mode, app, ndev, faults=None):
+        env = dict(os.environ, REPRO_DEVICES=str(ndev))
+        env.pop("XLA_FLAGS", None)
+        env.pop("REPRO_FAULTS", None)
+        if faults:
+            env["REPRO_FAULTS"] = faults
+        r = subprocess.run([sys.executable, me, mode, tmp, app], env=env,
+                           capture_output=True, text=True, timeout=600)
+        sys.stdout.write(r.stdout)
+        sys.stderr.write(r.stderr)
+        if r.returncode != 0:
+            raise SystemExit(f"{mode}:{app} subprocess failed "
+                             f"(rc={r.returncode})")
+        return r.stdout
+
+    loss = f"loop.device_loss:crash:at={CRASH_AT}"
+    for app in ("pagerank", "fastsv"):
+        sub("baseline", app, 4)
+        out = sub("crash", app, 8, faults=loss)
+        assert f"CRASHED {app}" in out, out
+        sub("resume", app, 4)               # 2x2 checkpoint -> 1x1 finish
+        sub("live", app, 8, faults=loss)    # in-process 2x2 -> 1x1 regrid
+    print("PASS elastic-regrid")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2], *sys.argv[3:])

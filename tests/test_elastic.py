@@ -1,0 +1,398 @@
+"""Elastic topology recovery units: watchdog, exchange deadlines, regrid,
+mesh-independent sparse checkpoints, schedule demotion, straggler re-plan.
+
+The end-to-end crash-and-shrink story (8 devices -> crash -> resume on 4,
+bitwise) lives in elastic_regrid_scenario.py (subprocess; CI chaos-smoke).
+Everything here runs on the default single-device test environment —
+multi-grid containers are exercised host-side (``mesh=None``), which is the
+same assembly/extraction code path shard_put would wrap.
+"""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import DistSpMat, make_grid
+from repro.core.dist import DistSpMat3D, restore_spmat, save_spmat
+from repro.launch.elastic import StepWatchdog
+from repro.robust import deadline, faults
+from repro.robust.deadline import ExchangeGuard, ExchangeTimeout, \
+    TopologyError
+from repro.robust.recover import CheckpointedLoop
+
+
+def _coo(n=48, density=0.08, seed=0, vdtype=np.float32):
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((n, n)) < density)
+    r, c = np.nonzero(dense)
+    v = rng.standard_normal(len(r)).astype(vdtype)
+    return (n, n), r.astype(np.int64), c.astype(np.int64), v
+
+
+# --------------------------------------------------------------------------
+# StepWatchdog (launch/elastic.py) — direct unit tests
+# --------------------------------------------------------------------------
+
+class TestStepWatchdog:
+    def test_warmup_no_budget(self):
+        wd = StepWatchdog(grace=2.0, window=8, min_samples=3)
+        for t in (1.0, 1.0):
+            wd.times.append(t)
+        assert wd.budget() is None            # < min_samples: still warmup
+        assert not wd.is_straggling(100.0)    # never flags during warmup
+        wd.times.append(1.0)
+        assert wd.budget() == pytest.approx(2.0)
+        assert wd.is_straggling(2.5)
+        assert not wd.is_straggling(1.5)
+
+    def test_window_eviction(self):
+        wd = StepWatchdog(grace=1.0, window=4, min_samples=2)
+        for t in (9.0, 9.0, 9.0, 9.0):
+            wd.times.append(t)
+        assert wd.budget() == pytest.approx(9.0)
+        for t in (1.0, 1.0, 1.0, 1.0):        # maxlen=4 evicts the 9s
+            wd.times.append(t)
+        assert wd.budget() == pytest.approx(1.0)
+
+    def test_reset_returns_to_warmup(self):
+        wd = StepWatchdog(min_samples=2)
+        wd.start()
+        wd.stop()
+        wd.times.append(0.5)
+        assert wd.budget() is not None
+        wd.reset()
+        assert wd.budget() is None
+        assert len(wd.times) == 0
+        assert wd._t0 is None
+
+
+# --------------------------------------------------------------------------
+# ExchangeGuard (robust/deadline.py)
+# --------------------------------------------------------------------------
+
+class TestExchangeGuard:
+    def test_startup_budget_until_min_samples(self):
+        g = ExchangeGuard(min_samples=3, startup_deadline=7.0, grace=2.0,
+                          floor=0.0)
+        assert g.budget("s") == 7.0
+        g.record("s", 0.1)
+        g.record("s", 0.1)
+        assert g.budget("s") == 7.0           # 2 < min_samples
+        g.record("s", 0.1)
+        assert g.budget("s") == pytest.approx(0.2)
+
+    def test_floor_and_median(self):
+        g = ExchangeGuard(min_samples=1, grace=4.0, floor=1.0)
+        g.record("s", 1e-5)
+        assert g.budget("s") == 1.0           # floor wins over 4x median
+        for _ in range(5):
+            g.record("s", 2.0)
+        assert g.budget("s") == pytest.approx(8.0)
+
+    def test_trip_raises_and_is_not_recorded(self):
+        g = ExchangeGuard(min_samples=1, startup_deadline=0.005)
+        with pytest.raises(ExchangeTimeout) as ei:
+            with g.watch("site.x"):
+                time.sleep(0.03)
+        assert ei.value.site == "site.x"
+        assert ei.value.elapsed > ei.value.budget_s
+        assert g.samples("site.x") == 0       # straggler must not poison
+        # AuditError subclass: the planner retry machinery catches it
+        from repro.robust.audit import AuditError
+        assert isinstance(ei.value, AuditError)
+
+    def test_good_exchanges_recorded(self):
+        g = ExchangeGuard(startup_deadline=30.0)
+        for _ in range(3):
+            with g.watch("site.y"):
+                pass
+        assert g.samples("site.y") == 3
+
+    def test_reset_one_site_and_all(self):
+        g = ExchangeGuard()
+        g.record("a", 1.0)
+        g.record("b", 1.0)
+        g.reset("a")
+        assert g.samples("a") == 0 and g.samples("b") == 1
+        g.record("a", 1.0)
+        g.reset()
+        assert g.samples("a") == 0 and g.samples("b") == 0
+
+    def test_backoff_deterministic_and_bounded(self):
+        g = ExchangeGuard(backoff_base=0.05, backoff_cap=5.0)
+        d1 = g.backoff_delay("site.x", 1)
+        assert d1 == g.backoff_delay("site.x", 1)          # seeded
+        assert d1 != g.backoff_delay("site.x", 2)          # attempt-keyed
+        assert d1 != g.backoff_delay("site.z", 1)          # site-keyed
+        for attempt in (1, 2, 3, 8):
+            base = min(5.0, 0.05 * 2 ** (attempt - 1))
+            d = g.backoff_delay("site.x", attempt)
+            assert 0.5 * base <= d <= 1.5 * base
+
+    def test_configure_scope_and_off(self):
+        with deadline.configure(startup_deadline=0.25) as g:
+            assert deadline.active_guard() is g
+            assert g.startup_deadline == 0.25
+            with deadline.configure(off=True):
+                assert not deadline.enabled()
+                with deadline.watch("nope"):   # no-op when off
+                    time.sleep(0.0)
+            assert deadline.active_guard() is g
+
+    def test_fault_fires_inside_timed_region(self):
+        # an armed straggler at dist.exchange_deadline is seen exactly as a
+        # slow wire: the watch times it and trips
+        with deadline.configure(startup_deadline=0.01):
+            with faults.inject("dist.exchange_deadline:delay:amount=0.05"):
+                with pytest.raises(ExchangeTimeout):
+                    with deadline.watch("site.w"):
+                        pass
+
+
+# --------------------------------------------------------------------------
+# regrid: live grid shrink, bitwise
+# --------------------------------------------------------------------------
+
+class TestRegrid2D:
+    @pytest.mark.parametrize("new_grid", [(2, 2), (1, 1)])
+    def test_shrink_bitwise(self, new_grid):
+        shape, r, c, v = _coo(seed=1)
+        a = DistSpMat.from_global_coo(shape, r, c, v, (4, 4))
+        b = a.regrid(new_grid)
+        assert b.grid == new_grid
+        np.testing.assert_array_equal(b.to_dense(), a.to_dense())
+
+    def test_grow_bitwise(self):
+        shape, r, c, v = _coo(seed=2)
+        a = DistSpMat.from_global_coo(shape, r, c, v, (1, 1))
+        b = a.regrid((3, 3))
+        np.testing.assert_array_equal(b.to_dense(), a.to_dense())
+
+    @pytest.mark.parametrize("tag", ["row", "col"])
+    def test_order_tag_preserved(self, tag):
+        shape, r, c, v = _coo(seed=3)
+        a = DistSpMat.from_global_coo(shape, r, c, v, (2, 2), order=tag)
+        assert a.order == tag
+        b = a.regrid((1, 1))
+        assert b.order == tag
+        np.testing.assert_array_equal(b.to_dense(), a.to_dense())
+
+    def test_cap_replanned_and_override(self):
+        shape, r, c, v = _coo(seed=4)
+        a = DistSpMat.from_global_coo(shape, r, c, v, (4, 4))
+        b = a.regrid((1, 1))          # 1 tile holds ALL entries now
+        assert b.cap >= len(r)
+        assert b.regrid((1, 1), cap=4096).cap == 4096
+
+    def test_empty_matrix(self):
+        a = DistSpMat.from_global_coo(
+            (32, 32), np.zeros(0, np.int64), np.zeros(0, np.int64),
+            np.zeros(0, np.float32), (2, 2))
+        b = a.regrid((1, 1))
+        assert int(np.asarray(b.nnz).sum()) == 0
+        assert b.shape == (32, 32)
+
+    def test_on_mesh(self):
+        # the single-device grid still round-trips through shard_put
+        shape, r, c, v = _coo(seed=5)
+        mesh = make_grid(1, 1)
+        a = DistSpMat.from_global_coo(shape, r, c, v, (1, 1), mesh=mesh)
+        b = a.regrid((1, 1), mesh=mesh)
+        np.testing.assert_array_equal(b.to_dense(), a.to_dense())
+
+
+class TestRegrid3D:
+    def test_layer_shrink_bitwise(self):
+        shape, r, c, v = _coo(n=60, seed=6)
+        a = DistSpMat3D.from_global_coo(shape, r, c, v, (2, 2, 2), "acol")
+        b = a.regrid((1, 2, 2))
+        assert b.grid == (1, 2, 2) and b.dist == "acol"
+        np.testing.assert_array_equal(b.to_dense(), a.to_dense())
+
+    def test_dist_override(self):
+        shape, r, c, v = _coo(n=60, seed=7)
+        a = DistSpMat3D.from_global_coo(shape, r, c, v, (2, 2, 2), "brow")
+        b = a.regrid((2, 1, 1), dist="csub")
+        assert b.dist == "csub"
+        np.testing.assert_array_equal(b.to_dense(), a.to_dense())
+
+
+# --------------------------------------------------------------------------
+# mesh-independent sparse checkpoints (core/dist.py <-> train/checkpoint.py)
+# --------------------------------------------------------------------------
+
+class TestSparseCheckpoint:
+    def test_roundtrip_cross_grid_2d(self, tmp_path):
+        shape, r, c, v = _coo(seed=8)
+        a = DistSpMat.from_global_coo(shape, r, c, v, (4, 4), order="col")
+        save_spmat(str(tmp_path), 7, a)
+        # restore onto a SMALLER grid than the one that saved
+        b, step = restore_spmat(str(tmp_path), (2, 2))
+        assert step == 7
+        assert b.grid == (2, 2)
+        assert b.order == "col"               # tag rides through the bytes
+        np.testing.assert_array_equal(b.to_dense(), a.to_dense())
+
+    def test_roundtrip_3d_and_layer_loss(self, tmp_path):
+        shape, r, c, v = _coo(n=60, seed=9)
+        a = DistSpMat3D.from_global_coo(shape, r, c, v, (2, 2, 2), "brow")
+        save_spmat(str(tmp_path), 3, a)
+        b, step = restore_spmat(str(tmp_path), (1, 2, 2))
+        assert step == 3
+        assert b.grid == (1, 2, 2) and b.dist == "brow"
+        np.testing.assert_array_equal(b.to_dense(), a.to_dense())
+
+    def test_restore_3d_checkpoint_as_2d(self, tmp_path):
+        # the state is mesh-independent global COO: the container family is
+        # the RESTORER's choice, not baked into the checkpoint
+        shape, r, c, v = _coo(n=60, seed=10)
+        a = DistSpMat3D.from_global_coo(shape, r, c, v, (2, 2, 2), "acol")
+        save_spmat(str(tmp_path), 0, a)
+        b, _ = restore_spmat(str(tmp_path), (2, 2))
+        assert isinstance(b, DistSpMat)
+        np.testing.assert_array_equal(b.to_dense(), a.to_dense())
+
+    def test_crc_manifest_path(self, tmp_path):
+        # rides train/checkpoint.py: manifest + per-leaf npy exist
+        shape, r, c, v = _coo(seed=11)
+        a = DistSpMat.from_global_coo(shape, r, c, v, (2, 2))
+        save_spmat(str(tmp_path), 12, a)
+        stepdir = tmp_path / "step_00000012"
+        assert (stepdir / "manifest.json").exists()
+        assert any(f.suffix == ".npy" for f in stepdir.iterdir())
+
+
+# --------------------------------------------------------------------------
+# hybrid-schedule demotion (core/plan.demote_stage)
+# --------------------------------------------------------------------------
+
+class TestDemoteStage:
+    def _plan(self, schedule=None, q=4):
+        from repro.core.plan import SpGEMMPlan
+        return SpGEMMPlan(prod_cap=64, out_cap=64, variant="rotation",
+                          merge="sort", prod_ceiling=1 << 20,
+                          out_ceiling=1 << 20, est_flops=1.0, est_out=1.0,
+                          schedule=schedule)
+
+    def test_expands_whole_sweep_schedule(self):
+        from repro.core.plan import demote_stage
+        p = self._plan(schedule=None)
+        with pytest.warns(RuntimeWarning, match="demoting exchange stage"):
+            p2 = demote_stage(p, 2, 4)
+        assert p2.schedule == ("bcast", "bcast", "gather", "bcast")
+        assert p2.variant == "hybrid"
+        assert "demote-stage:2" in p2.degraded
+
+    def test_tuple_schedule_and_idempotence(self):
+        from repro.core.plan import demote_stage
+        p = self._plan(schedule=("bcast", "gather", "bcast", "bcast"))
+        with pytest.warns(RuntimeWarning):
+            p2 = demote_stage(p, 0, 4)
+        assert p2.schedule == ("gather", "gather", "bcast", "bcast")
+        assert demote_stage(p2, 1, 4) is p2   # already gather: no-op
+
+    def test_stage_bounds(self):
+        from repro.core.plan import demote_stage
+        with pytest.raises(ValueError):
+            demote_stage(self._plan(), 4, 4)
+        with pytest.raises(ValueError):
+            demote_stage(self._plan(schedule=("bcast",) * 3), 0, 4)
+
+
+# --------------------------------------------------------------------------
+# CheckpointedLoop: topology events + persistent stragglers
+# --------------------------------------------------------------------------
+
+class TestElasticLoop:
+    @staticmethod
+    def _counting_body(log):
+        def body(it, state):
+            log.append(it)
+            return {"x": np.asarray(state["x"]) + 1}, False
+        return body
+
+    def test_device_loss_without_hook_raises(self):
+        loop = CheckpointedLoop()
+        with faults.inject("loop.device_loss:crash:at=3"):
+            with pytest.raises(TopologyError):
+                loop.run({"x": np.int64(0)}, self._counting_body([]), 8)
+
+    def test_device_loss_with_hook_reruns_same_iteration(self):
+        seen, hook = [], []
+        loop = CheckpointedLoop(
+            on_topology=lambda s, e: (hook.append(e), s)[1])
+        with faults.inject("loop.device_loss:crash:at=3"):
+            state = loop.run({"x": np.int64(0)}, self._counting_body(seen), 5)
+        # activation 3 fires at iteration 2 BEFORE body runs; the hook
+        # regrids and the same iteration re-runs: no iteration is skipped
+        assert seen == [0, 1, 2, 3, 4]
+        assert int(state["x"]) == 5
+        assert len(hook) == 1 and hook[0].site == "loop.device_loss"
+
+    def test_max_topology_events_rethrows(self):
+        loop = CheckpointedLoop(on_topology=lambda s, e: s,
+                                max_topology_events=1)
+        with faults.inject("loop.device_loss:crash:at=2,count=3"):
+            with pytest.raises(TopologyError):
+                loop.run({"x": np.int64(0)}, self._counting_body([]), 8)
+
+    def test_checkpoint_then_resume_after_loss(self, tmp_path):
+        ck = str(tmp_path / "ck")
+        seen = []
+        loop = CheckpointedLoop(ck)
+        with faults.inject("loop.device_loss:crash:at=4"):
+            with pytest.raises(TopologyError):
+                loop.run({"x": np.int64(0)}, self._counting_body(seen), 6)
+        assert seen == [0, 1, 2]              # died entering iteration 3
+        # a fresh process (smaller topology) resumes: redoes it 3 onward
+        state = CheckpointedLoop(ck).run({"x": np.int64(0)},
+                                         self._counting_body(seen), 6)
+        assert seen == [0, 1, 2, 3, 4, 5]
+        assert int(state["x"]) == 6
+
+    def test_straggler_triggers_replan_with_real_watchdog(self):
+        wd = StepWatchdog(grace=1.5, window=8, min_samples=2)
+        calls = []
+        loop = CheckpointedLoop(watchdog=wd, straggler_patience=1,
+                                on_straggler=lambda it, dt: calls.append(it))
+        with faults.inject("loop.delay:delay:amount=0.12,at=3,count=5"):
+            with pytest.warns(RuntimeWarning, match="straggling"):
+                loop.run({"x": np.int64(0)}, self._counting_body([]), 7)
+        # first over-budget iteration re-plans; the reset re-learns the
+        # (now slow) timing, so the later delayed iterations don't re-fire
+        assert calls == [2]
+        assert len(wd.times) < wd.min_samples or not wd.is_straggling(0.12)
+
+    def test_straggler_patience_counts_consecutive_only(self):
+        class ScriptedWD:
+            """stop() returns the scripted dt; >1.0 counts as straggling."""
+            def __init__(self, dts):
+                self.dts = list(dts)
+                self.resets = 0
+
+            def start(self):
+                pass
+
+            def stop(self):
+                return self.dts.pop(0)
+
+            def budget(self):
+                return 1.0
+
+            def is_straggling(self, dt):
+                return dt > 1.0
+
+            def reset(self):
+                self.resets += 1
+
+        # straggle, clean, straggle, straggle: only the CONSECUTIVE pair
+        # reaches patience=2 — the clean iteration resets the count
+        wd = ScriptedWD([5.0, 0.1, 5.0, 5.0, 0.1])
+        calls = []
+        loop = CheckpointedLoop(watchdog=wd, straggler_patience=2,
+                                on_straggler=lambda it, dt: calls.append(it))
+        with pytest.warns(RuntimeWarning, match="straggling"):
+            loop.run({"x": np.int64(0)}, self._counting_body([]), 5)
+        assert calls == [3]
+        assert wd.resets == 1

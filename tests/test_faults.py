@@ -478,6 +478,73 @@ class TestAppCrashResume:
         assert np.array_equal(baseline, resumed)
 
 
+class TestTopologyFaults:
+    """The topology tier (robust/deadline.py): a straggling exchange trips
+    a wall-time deadline, gets seeded-backoff retries, sheds the fancy
+    schedule, and only a PERSISTENT straggler escalates to TopologyError —
+    the elastic checkpoint/regrid signal. Driven by the
+    ``dist.exchange_deadline`` delay site and ``loop.device_loss``."""
+
+    def _mat(self, mesh):
+        _, (r, c, v) = make_graph(24, 0.2, seed=13)
+        return DistSpMat.from_global_coo((24, 24), r, c, v, (1, 1),
+                                         mesh=mesh)
+
+    def test_deadline_trip_backoff_then_schedule_shed(self, mesh):
+        from repro.robust import deadline
+        A = self._mat(mesh)
+        ref, p0 = spgemm_planned(A, A, ARITHMETIC, mesh=mesh)
+        assert p0.overlap and not p0.degraded
+        # budget 50ms, 200ms injected straggle for 4 consecutive exchanges:
+        # 3 backoff retries, then the serial-schedule rung sheds the
+        # overlapped schedule; the 5th exchange is clean -> exact result
+        with deadline.configure(startup_deadline=0.05, backoff_base=0.01), \
+             faults.inject("dist.exchange_deadline:delay:amount=0.2,count=4"), \
+             pytest.warns(RuntimeWarning, match="backing off"):
+            got, p = spgemm_planned(A, A, ARITHMETIC, mesh=mesh)
+        assert any(d.startswith("serial-schedule") for d in p.degraded)
+        assert p.attempts == 5
+        np.testing.assert_array_equal(got.to_dense(), ref.to_dense())
+
+    def test_persistent_deadline_escalates_to_topology_error(self, mesh):
+        from repro.robust import deadline
+        from repro.robust.deadline import TopologyError
+        A = self._mat(mesh)
+        try:
+            with deadline.configure(startup_deadline=0.02,
+                                    backoff_base=0.005), \
+                 faults.inject(
+                     "dist.exchange_deadline:delay:amount=0.1,count=99"), \
+                 pytest.warns(RuntimeWarning):
+                with pytest.raises(TopologyError) as ei:
+                    spgemm_planned(A, A, ARITHMETIC, mesh=mesh)
+            # ladder exhausted first (rungs 4/5 flip process globals)
+            assert ei.value.site == "spgemm2d.comm_a"
+        finally:
+            recover.reset_degradation()
+
+    def test_device_loss_without_hook_is_fatal(self):
+        from repro.robust.deadline import TopologyError
+
+        def body(it, state):
+            return {"x": np.asarray(state["x"]) + 1}, False
+        with faults.inject("loop.device_loss:crash:at=2"):
+            with pytest.raises(TopologyError):
+                CheckpointedLoop().run({"x": np.int64(0)}, body, 6)
+
+    def test_device_loss_with_hook_recovers_exactly(self):
+        hooked = []
+
+        def body(it, state):
+            return {"x": np.asarray(state["x"]) + 1}, False
+        loop = CheckpointedLoop(
+            on_topology=lambda s, e: (hooked.append(e.site), s)[1])
+        with faults.inject("loop.device_loss:crash:at=2"):
+            state = loop.run({"x": np.int64(0)}, body, 6)
+        assert int(state["x"]) == 6           # no iteration lost or doubled
+        assert hooked == ["loop.device_loss"]
+
+
 # --------------------------------------------------------------------------
 # coverage meta-test: the chaos matrix must exercise EVERY known site
 # --------------------------------------------------------------------------

@@ -184,3 +184,34 @@ class TestData:
         with pytest.raises(OSError, match="shard server went away"):
             pf.next()
         pf.close()
+
+    def test_prefetcher_close_joins_blocked_worker(self):
+        """Regression: close() used to drain once then join — the worker
+        could re-fill the depth-1 queue between the two and stay blocked in
+        put() forever (silent thread leak). close() must actually reap it
+        and report success."""
+        from repro.train.data import Prefetcher
+        pf = Prefetcher(SyntheticLM(256, 16, 2, seed=8), depth=1)
+        pf.next()                 # worker is now blocked re-filling
+        assert pf.close() is True
+        assert not pf.t.is_alive()
+
+    def test_prefetcher_close_warns_on_stuck_source(self):
+        """A worker stuck INSIDE source.batch_at can't be reaped — close()
+        must say so loudly and return False, not silently leak."""
+        import threading
+        from repro.train.data import Prefetcher
+        release = threading.Event()
+
+        class Hangs:
+            def batch_at(self, step):
+                release.wait()           # simulated hung shard server
+                return {"tokens": np.zeros((2, 16), np.int32)}
+
+        pf = Prefetcher(Hangs(), depth=1)
+        try:
+            with pytest.warns(RuntimeWarning, match="still alive"):
+                assert pf.close(timeout=0.3) is False
+        finally:
+            release.set()                # let the daemon thread exit
+            pf.t.join(timeout=5.0)
