@@ -22,6 +22,7 @@ import jax.numpy as jnp                                        # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro import obs                                          # noqa: E402
 from repro.core import (ARITHMETIC, DistSpMat, DistSpMat3D, make_grid,      # noqa: E402
                         spgemm_2d, spgemm_3d)
 from repro.io import rmat_coo                                  # noqa: E402
@@ -175,6 +176,7 @@ def sweep():
     rows.append(("dist_compress_bytes_ratio",
                  cbytes[None] / max(cbytes["int8"], 1e-9),
                  "float-wire/int8-wire collective bytes (rotate)"))
+    rows.extend(_trace_rows(A, mesh, scheds, pc, oc))
     # strong scaling: fixed problem, p up; weak scaling: problem grows with p
     strong_qs = [1, 2] + ([4] if N_DEV >= 16 else [])
     for bq in strong_qs:
@@ -184,6 +186,43 @@ def sweep():
         t, cb = _grid_point(bq, scale=scale)
         rows.append((f"dist_weak_s{scale}_p{bq * bq}", t,
                      f"collbytes={cb:.0f}"))
+    return rows
+
+
+def _trace_rows(A, mesh, scheds, pc, oc):
+    """Flight-recorder pass (§4.8 observability): re-run one EAGER call per
+    schedule so the trace carries real per-stage spans — the jitted sweep
+    calls above trace once (obs no-ops inside tracing) and replay opaquely.
+    Produces the obs-derived BENCH rows and leaves the recorder populated
+    for the ``# trace_summary=`` line / ``REPRO_TRACE`` export."""
+    obs.enable()
+    ctr0 = dict(obs.counters())
+    for sname, sched in scheds.items():
+        with obs.span("bench.spgemm", schedule=sname):
+            out = spgemm_2d(A, A, ARITHMETIC, mesh=mesh, prod_cap=pc,
+                            out_cap=oc, merge="deferred", schedule=sched,
+                            overlap=True)
+            obs.sync(out)
+    with obs.span("bench.spgemm", schedule="rotate", compress="int8"):
+        out = spgemm_2d(A, A, ARITHMETIC, mesh=mesh, prod_cap=pc,
+                        out_cap=oc, merge="deferred", schedule="rotate",
+                        overlap=True, compress="int8")
+        obs.sync(out)
+    ctr = obs.counters()
+    delta = lambda k: ctr.get(k, 0) - ctr0.get(k, 0)
+    rows = [("dist_trace_span_coverage", obs.coverage("spgemm2d") * 100.0,
+             "pct of spgemm2d wall covered by child spans")]
+    bin_, bout = delta("dist.compress.bytes_in"), \
+        delta("dist.compress.bytes_out")
+    if bout:
+        rows.append(("dist_compress_value_bytes_ratio", bin_ / bout,
+                     f"value payload f32/int8 bytes in={bin_} out={bout}"))
+    rows.append(("dist_audit_failures", float(delta("audit.failures")),
+                 "obs counter (sweep)"))
+    rows.append(("dist_deadline_trips", float(delta("deadline.trips")),
+                 "obs counter (sweep)"))
+    rows.append(("dist_ladder_rungs", float(delta("ladder.rungs")),
+                 "obs counter (sweep)"))
     return rows
 
 
@@ -213,3 +252,6 @@ if __name__ == "__main__":
     rows = fns[which]()
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if obs.enabled():
+        import json
+        print("# trace_summary=" + json.dumps(obs.snapshot()))

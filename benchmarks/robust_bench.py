@@ -139,19 +139,39 @@ def run(quick: bool = True):
     t0 = time.perf_counter()
     spgemm_planned(A, A, ARITHMETIC, mesh=mesh)
     clean = time.perf_counter() - t0
+    from repro import obs
+    obs.enable()
+    ctr0 = dict(obs.counters())
     with warnings.catch_warnings():
         warnings.simplefilter("ignore")
-        with deadline.configure(startup_deadline=0.005, backoff_base=0.002):
+        with deadline.configure(startup_deadline=0.005,
+                                backoff_base=0.002) as guard:
             with faults.inject(
                     "dist.exchange_deadline:delay:amount=0.02,count=1"):
                 t0 = time.perf_counter()
-                spgemm_planned(A, A, ARITHMETIC, mesh=mesh)
+                _, fpl = spgemm_planned(A, A, ARITHMETIC, mesh=mesh)
                 faulted = time.perf_counter() - t0
+            trips = sum(guard.stats(s)["trips"] for s in guard.sites())
+    ctr = obs.counters()
     rows.append(("robust_recovery_overhead_ratio", faulted / max(clean, 1e-9),
                  f"clean={clean * 1e6:.0f}us faulted={faulted * 1e6:.0f}us"))
+    # flight-recorder view of the same event (satellite rows: the ladder /
+    # retry / audit state lands in BENCH_robust.json, not just stderr)
+    rows.append(("robust_faulted_attempts", float(fpl.attempts),
+                 "degraded=" + (",".join(fpl.degraded) or "none")))
+    rows.append(("robust_deadline_trips", float(trips),
+                 "guard.stats() across the faulted spgemm"))
+    rows.append(("robust_audit_failures",
+                 float(ctr.get("audit.failures", 0)
+                       - ctr0.get("audit.failures", 0)),
+                 "obs counter delta (faulted spgemm)"))
     return rows
 
 
 if __name__ == "__main__":
     for name, us, derived in run(quick="--full" not in sys.argv):
         print(f"{name},{us:.1f},{derived}")
+    from repro import obs
+    if obs.enabled():
+        import json
+        print("# trace_summary=" + json.dumps(obs.snapshot()))

@@ -46,8 +46,12 @@ def emit(rows):
         print(f"{name},{us:.1f},{derived}")
 
 
-def write_bench_json(rows, path=None):
-    """Trajectory artifact: µs per benchmark + every speedup/ratio key."""
+def write_bench_json(rows, path=None, trace_summary=None):
+    """Trajectory artifact: µs per benchmark + every speedup/ratio key.
+
+    ``trace_summary`` (obs.snapshot() or a dict of them) is embedded
+    verbatim so each BENCH_*.json carries its flight-recorder view —
+    per-site span stats, counter totals, deadline windows."""
     path = path or os.path.join(ROOT, "BENCH_spgemm.json")
     doc = {
         "benchmarks": {name: {"us": round(us, 1), "derived": derived}
@@ -55,6 +59,8 @@ def write_bench_json(rows, path=None):
         "speedups": {name: round(us, 3) for name, us, _ in rows
                      if "speedup" in name or "ratio" in name},
     }
+    if trace_summary is not None:
+        doc["trace_summary"] = trace_summary
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
     print(f"# wrote {os.path.relpath(path)}", file=sys.stderr)
@@ -64,13 +70,23 @@ def write_bench_json(rows, path=None):
 def run_dist(which: str, devices: int | None = None):
     """Run one dist_bench mode in a forced-device subprocess.
 
-    Returns the parsed ``(name, us, derived)`` rows, or None on failure
-    (the caller decides whether that is fatal — it is under ``--json``).
+    Returns ``(rows, trace_summary)`` — the parsed ``(name, us, derived)``
+    rows plus the child's flight-recorder snapshot (from its
+    ``# trace_summary=`` stdout line; None when the child recorded
+    nothing) — or ``(None, None)`` on failure (the caller decides whether
+    that is fatal — it is under ``--json``). The child records with
+    ``REPRO_OBS=1``; a parent ``REPRO_TRACE=<p>`` is rewritten to
+    ``<p-base>.dist_<which>.json`` so each subprocess writes its own
+    Chrome trace instead of clobbering the parent's.
     """
     if devices is None:
         devices = int(os.environ.get("REPRO_DEVICES", "16"))
-    env = dict(os.environ, REPRO_DEVICES=str(devices))
+    env = dict(os.environ, REPRO_DEVICES=str(devices), REPRO_OBS="1")
     env.pop("XLA_FLAGS", None)
+    trace = os.environ.get("REPRO_TRACE")
+    if trace:
+        base, ext = os.path.splitext(trace)
+        env["REPRO_TRACE"] = f"{base}.dist_{which}{ext or '.json'}"
     script = os.path.join(os.path.dirname(__file__), "dist_bench.py")
     proc = subprocess.run([sys.executable, script, which],
                           capture_output=True, text=True, env=env,
@@ -78,17 +94,21 @@ def run_dist(which: str, devices: int | None = None):
     if proc.returncode != 0:
         print(f"dist_bench_{which},0.0,FAILED", flush=True)
         sys.stderr.write(proc.stderr[-2000:])
-        return None
-    out = proc.stdout.strip()
-    if out:
-        print(out)
-    rows = []
-    for line in out.splitlines():
+        return None, None
+    rows, summary = [], None
+    for line in proc.stdout.strip().splitlines():
+        if line.startswith("# trace_summary="):
+            try:
+                summary = json.loads(line.split("=", 1)[1])
+            except ValueError:
+                summary = None
+            continue
+        print(line)
         if not line or line.startswith("#"):
             continue
         name, us, derived = line.split(",", 2)
         rows.append((name, float(us), derived))
-    return rows
+    return rows, summary
 
 
 def kernels_bench(quick=True):
@@ -144,32 +164,48 @@ def main() -> None:
     def want(name):
         return only is None or name in only
 
+    obs = None
+    if args.json:
+        # flight recorder on for the in-process sections: each BENCH json
+        # embeds its own section's snapshot (reset between sections)
+        from repro import obs
+        obs.enable()
+
     if want("spmspv"):
         from benchmarks import spmspv_sweep
         emit(spmspv_sweep.run(quick=quick))
     if want("spgemm_local"):
         from benchmarks import spgemm_local
+        if obs:
+            obs.reset()
         rows = spgemm_local.run(quick=quick)
         emit(rows)
         if args.json:
-            write_bench_json(rows)
+            write_bench_json(rows, trace_summary=obs.snapshot())
     if want("dist"):
         parts = [run_dist("sweep"), run_dist("evolution"),
                  run_dist("scaling")]
         if args.json:
-            if any(p is None for p in parts):
+            if any(rows is None for rows, _ in parts):
                 raise SystemExit(
                     "dist benchmark subprocess failed — refusing to write "
                     "a partial BENCH_dist.json")
-            write_bench_json([r for p in parts for r in p],
-                             path=os.path.join(ROOT, "BENCH_dist.json"))
+            summaries = {mode: s for mode, (_, s) in
+                         zip(("sweep", "evolution", "scaling"), parts)
+                         if s is not None}
+            write_bench_json([r for rows, _ in parts for r in rows],
+                             path=os.path.join(ROOT, "BENCH_dist.json"),
+                             trace_summary=summaries or None)
     if want("robust"):
         from benchmarks import robust_bench
+        if obs:
+            obs.reset()
         rows = robust_bench.run(quick=quick)
         emit(rows)
         if args.json:
             write_bench_json(rows,
-                             path=os.path.join(ROOT, "BENCH_robust.json"))
+                             path=os.path.join(ROOT, "BENCH_robust.json"),
+                             trace_summary=obs.snapshot())
     if want("apps"):
         from benchmarks import apps_bench
         emit(apps_bench.run(quick=quick))

@@ -22,6 +22,7 @@ from jax.sharding import Mesh
 
 from ..core import (BOOLEAN, DistSpMat, DistSpVec, DistVec,
                     transpose_spvec_layout)
+from ..obs import recorder as _obs
 from ..core.mask import vector_mask
 from ..core.matops import spvec_nnz, vec_scatter_spvec
 from ..core.plan import plan_spmspv, spmspv as spmspv_planned
@@ -52,15 +53,17 @@ def bfs_levels(a: DistSpMat, source: int, *, mesh: Mesh,
     max_iters = max_iters or n
     while int(spvec_nnz(frontier)) > 0 and level < max_iters:
         level += 1
-        fcol = transpose_spvec_layout(frontier, mesh=mesh)
-        # visited vertices (level >= 0) as a complement mask: the fused
-        # kernel emits ONLY unvisited neighbors — no post-filter pass
-        visited = vector_mask(levels, pred=lambda lv: lv >= 0,
-                              complement=True)
-        nxt, _plan = spmspv_planned(a, fcol, BOOLEAN, mesh=mesh,
-                                    mask=visited,
-                                    prod_cap=prod_cap, out_cap=out_cap)
-        levels = vec_scatter_spvec(
-            levels, nxt, lambda cur, xv: jnp.full_like(cur, level))
-        frontier = nxt
+        with _obs.span("bfs.level", level=level,
+                       frontier_nnz=int(spvec_nnz(frontier))):
+            fcol = transpose_spvec_layout(frontier, mesh=mesh)
+            # visited vertices (level >= 0) as a complement mask: the fused
+            # kernel emits ONLY unvisited neighbors — no post-filter pass
+            visited = vector_mask(levels, pred=lambda lv: lv >= 0,
+                                  complement=True)
+            nxt, _plan = spmspv_planned(a, fcol, BOOLEAN, mesh=mesh,
+                                        mask=visited,
+                                        prod_cap=prod_cap, out_cap=out_cap)
+            levels = vec_scatter_spvec(
+                levels, nxt, lambda cur, xv: jnp.full_like(cur, level))
+            frontier = nxt
     return levels.to_global().astype(np.int32)

@@ -114,7 +114,8 @@ def fastsv(a: DistSpMat, *, mesh: Mesh, max_iters: int = 64,
             return state
 
     loop = CheckpointedLoop(checkpoint_dir, every=checkpoint_every,
-                            watchdog=watchdog, on_topology=on_topology)
+                            watchdog=watchdog, on_topology=on_topology,
+                            name="fastsv")
     state = loop.run({"f": np.arange(n, dtype=np.int32)}, body, max_iters)
     # final pointer jumping to full convergence
     f = distribute(state["f"])

@@ -121,7 +121,8 @@ def hipmcl(a: DistSpMat, *, mesh: Mesh, inflation: float = 2.0,
             return state  # global COO — unpack lands it on the new grid
 
     loop = CheckpointedLoop(checkpoint_dir, every=checkpoint_every,
-                            watchdog=watchdog, on_topology=on_topology)
+                            watchdog=watchdog, on_topology=on_topology,
+                            name="hipmcl")
     state = loop.run(pack_state(c, np.nan), body, max_iters)
     c, _ = unpack_state(state)
     mesh2 = ctx["mesh"]

@@ -94,7 +94,8 @@ def pagerank(a: DistSpMat, *, mesh: Mesh, alpha: float = 0.85,
             return state
 
     loop = CheckpointedLoop(checkpoint_dir, every=checkpoint_every,
-                            watchdog=watchdog, on_topology=on_topology)
+                            watchdog=watchdog, on_topology=on_topology,
+                            name="pagerank")
     state = loop.run({"r": np.full(n, 1.0 / n, np.float32)}, body, max_iters)
     out = np.asarray(state["r"], np.float32)
     return out / out.sum()

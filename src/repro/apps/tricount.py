@@ -17,13 +17,16 @@ from ..core import ARITHMETIC, DistSpMat
 from ..core.mask import structural
 from ..core.matops import mat_apply_local, mat_select_lower, mat_sum
 from ..core.plan import spgemm as spgemm_planned
+from ..obs import recorder as _obs
 
 
 def triangle_count(a: DistSpMat, *, mesh: Mesh, prod_cap: int | None = None,
                    out_cap: int | None = None) -> int:
     """Count triangles of the symmetric graph ``a`` (values ignored)."""
-    ones = lambda t: t.apply(lambda v: jnp.ones_like(v))
-    l = mat_select_lower(mat_apply_local(a, ones, mesh=mesh), mesh=mesh)
-    b, _plan = spgemm_planned(l, l, ARITHMETIC, mesh=mesh, mask=structural(l),
-                              prod_cap=prod_cap, out_cap=out_cap)
-    return int(mat_sum(b))
+    with _obs.span("tricount"):
+        ones = lambda t: t.apply(lambda v: jnp.ones_like(v))
+        l = mat_select_lower(mat_apply_local(a, ones, mesh=mesh), mesh=mesh)
+        b, _plan = spgemm_planned(l, l, ARITHMETIC, mesh=mesh,
+                                  mask=structural(l),
+                                  prod_cap=prod_cap, out_cap=out_cap)
+        return int(mat_sum(b))

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..obs import recorder as _obs
 from ..robust import audit as _audit, faults as _faults
 from . import compat
 from .coo import COO, SENTINEL
@@ -125,6 +126,7 @@ class DistSpMat:
 
     # ---------------- host-side assembly / extraction ----------------
     @staticmethod
+    @_obs.timed("dist.assemble")
     def from_global_coo(shape, rows, cols, vals, grid, *, mesh: Mesh = None,
                         cap: int | None = None, pad: float = 1.25,
                         random_permute: bool = False, seed: int = 0,
@@ -202,6 +204,7 @@ class DistSpMat:
         return (np.concatenate(rows), np.concatenate(cols),
                 np.concatenate(vals))
 
+    @_obs.timed("dist.regrid")
     def regrid(self, grid, *, mesh: Mesh = None, cap: int | None = None,
                pad: float = 1.25) -> "DistSpMat":
         """Re-distribute onto a new process grid (elastic shrink/grow).
@@ -301,6 +304,7 @@ class DistSpMat3D:
         raise ValueError(self.dist)
 
     @staticmethod
+    @_obs.timed("dist.assemble3d")
     def from_global_coo(shape, rows, cols, vals, grid, dist, *,
                         mesh: Mesh = None, cap=None, pad=1.25,
                         random_permute=False, seed=0):
@@ -380,6 +384,7 @@ class DistSpMat3D:
         return (np.concatenate(rows), np.concatenate(cols),
                 np.concatenate(vals))
 
+    @_obs.timed("dist.regrid3d")
     def regrid(self, grid, *, mesh: Mesh = None, cap: int | None = None,
                pad: float = 1.25, dist: str | None = None) -> "DistSpMat3D":
         """Re-distribute onto a new (L, q, q) grid (elastic shrink/grow).
@@ -592,6 +597,7 @@ def shard_put(obj, mesh: Mesh):
 # mesh-independent sparse checkpoints (elastic topology recovery)
 # --------------------------------------------------------------------------
 
+@_obs.timed("dist.ckpt_save")
 def save_spmat(ckpt_dir: str, step: int, m, *, keep: int = 3) -> str:
     """Checkpoint a DistSpMat/DistSpMat3D through the CRC-manifest path.
 
@@ -612,6 +618,7 @@ def save_spmat(ckpt_dir: str, step: int, m, *, keep: int = 3) -> str:
     return save_checkpoint(ckpt_dir, step, tree, keep=keep)
 
 
+@_obs.timed("dist.ckpt_restore")
 def restore_spmat(ckpt_dir: str, grid, *, mesh: Mesh = None,
                   step: int | None = None, cap: int | None = None,
                   pad: float = 1.25, dist: str | None = None):

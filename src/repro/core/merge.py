@@ -34,6 +34,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from ..obs import recorder as _obs
 from ..robust import faults as _faults
 from .coo import SENTINEL
 from .semiring import Monoid, segment_reduce
@@ -209,6 +210,7 @@ def _reduce_runs(keys: Array, vals: Array, nnz: Array, shape, add: Monoid,
     return COO(row, col, val, ngrp.astype(jnp.int32), shape, order)
 
 
+@_obs.timed("merge.sort")
 def sort_packed(c, order: str = "row"):
     """Packed-key argsort + one gather (COO.sort's engine implementation)."""
     from .coo import COO
@@ -221,6 +223,7 @@ def sort_packed(c, order: str = "row"):
     return COO(c.row[perm], c.col[perm], c.val[perm], c.nnz, c.shape, order)
 
 
+@_obs.timed("merge.dedup")
 def dedup(c, add: Monoid, order: str = "row"):
     """Merge duplicate (row, col) entries (COO.dedup's engine implementation).
 
@@ -540,6 +543,7 @@ def merge_capped(a, b, add: Monoid, cap: int, order: str = "row"):
     return m.with_cap(cap, add.identity), ok
 
 
+@_obs.timed("merge.tree")
 def merge_tree(tiles: Sequence, add: Monoid, out_cap: int,
                order: str = "row"):
     """Pairwise merge of q sorted stage buffers (the SUMMA multiway merge).

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import recorder as _obs
 from ..robust import (audit as _audit, deadline as _deadline,
                       faults as _faults, recover as _recover)
 from .coo import COO
@@ -277,6 +278,7 @@ def spgemm(a: DistSpMat, b: DistSpMat | None = None,
         a, b, safety=safety, prod_cap=prod_cap, out_cap=out_cap,
         variant=variant, merge=merge, mask=mask, schedule=schedule,
         overlap=overlap, compress=compress)
+    _plan_event("plan.spgemm", p)
     cur_mask = mask
     post_mask = None       # set when the 'postfilter' rung strips the mask
     audit_fails = 0
@@ -290,6 +292,10 @@ def spgemm(a: DistSpMat, b: DistSpMat | None = None,
         except _audit.AuditError as err:
             audit_fails += 1
             timeout = isinstance(err, _deadline.ExchangeTimeout)
+            _obs.event("plan.audit_retry", op="spgemm", site=err.site,
+                       attempt=p.attempts, fails=audit_fails,
+                       timeout=timeout)
+            _obs.counter_add("plan.audit_retries")
             if audit_fails <= MAX_AUDIT_RETRIES:
                 warnings.warn(
                     f"SpGEMM attempt {p.attempts} failed audit at "
@@ -325,8 +331,14 @@ def spgemm(a: DistSpMat, b: DistSpMat | None = None,
         if bool(jnp.all(ok)):
             if post_mask is not None:
                 c = _recover.postfilter_2d(c, post_mask, sr, mesh=mesh)
+            if p.attempts > 1 or p.degraded:
+                _plan_event("plan.spgemm.done", p)
             return c, p
         if p.attempts < max_attempts and not p.at_ceiling():
+            _obs.event("plan.overflow_retry", op="spgemm",
+                       attempt=p.attempts, prod_cap=p.prod_cap,
+                       out_cap=p.out_cap)
+            _obs.counter_add("plan.overflow_retries")
             p = p.grown(growth)
             continue
         rung = _recover.next_rung(p, cur_mask, kind="spgemm")
@@ -344,6 +356,27 @@ def spgemm(a: DistSpMat, b: DistSpMat | None = None,
 # the retry loop escalates to the degradation ladder (transient wire faults
 # vs. a persistently-implicated pipeline stage).
 MAX_AUDIT_RETRIES = 3
+
+
+def _plan_event(kind: str, p):
+    """One structured obs event carrying a plan's full decision record.
+
+    Emitted when a plan is adopted (``plan.spgemm`` / ``plan.spmspv``) and
+    again at return when the retry loop changed it (``*.done``) — the
+    flight-recorder view of the paper's rules of thumb in action. Free
+    when obs is disabled (event() is one boolean read).
+    """
+    if not _obs.enabled():
+        return
+    s = getattr(p, "schedule", None)
+    _obs.event(kind,
+               variant=getattr(p, "variant", None),
+               merge=getattr(p, "merge", None),
+               schedule=s if (s is None or isinstance(s, str)) else "hybrid",
+               overlap=getattr(p, "overlap", None),
+               compress=getattr(p, "compress", None),
+               prod_cap=p.prod_cap, out_cap=p.out_cap,
+               attempts=p.attempts, degraded=",".join(p.degraded))
 
 
 def _spgemm_take_rung(rung, p, a, b, safety, cur_mask, post_mask):
@@ -392,6 +425,9 @@ def demote_stage(plan: SpGEMMPlan, stage: int, q: int) -> SpGEMMPlan:
         f"robust: demoting exchange stage {stage} to the batched 'gather' "
         f"leg (persistent straggler; schedule was {s!r})",
         RuntimeWarning, stacklevel=2)
+    _obs.event("ladder.demote_stage", stage=stage,
+               schedule=s if (s is None or isinstance(s, str)) else "hybrid")
+    _obs.counter_add("ladder.demotions")
     sched = base[:stage] + ("gather",) + base[stage + 1:]
     return dataclasses.replace(
         plan, schedule=sched, variant="hybrid",
@@ -529,6 +565,7 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring, *, mesh,
             prod_cap=prod_cap, out_cap=out_cap, variant=variant, merge=merge,
             add_tag=sr.add.tag, mask_allowed=allowed)
     p = plan
+    _plan_event("plan.spmspv", p)
     cur_mask = mask
     post_mask = None
     audit_fails = 0
@@ -540,6 +577,10 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring, *, mesh,
         except _audit.AuditError as err:
             audit_fails += 1
             timeout = isinstance(err, _deadline.ExchangeTimeout)
+            _obs.event("plan.audit_retry", op="spmspv", site=err.site,
+                       attempt=p.attempts, fails=audit_fails,
+                       timeout=timeout)
+            _obs.counter_add("plan.audit_retries")
             if audit_fails <= MAX_AUDIT_RETRIES:
                 warnings.warn(
                     f"SpMSpV attempt {p.attempts} failed audit at "
@@ -569,8 +610,14 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring, *, mesh,
         if bool(jnp.all(ok)):
             if post_mask is not None:
                 y = _recover.postfilter_spvec(y, post_mask)
+            if p.attempts > 1 or p.degraded:
+                _plan_event("plan.spmspv.done", p)
             return y, p
         if p.attempts < max_attempts and not p.at_ceiling():
+            _obs.event("plan.overflow_retry", op="spmspv",
+                       attempt=p.attempts, prod_cap=p.prod_cap,
+                       out_cap=p.out_cap)
+            _obs.counter_add("plan.overflow_retries")
             p = p.grown(growth)
             continue
         rung = _recover.next_rung(p, cur_mask, kind="spmspv")

@@ -70,6 +70,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..dist.compression import quantize_payload
+from ..obs import recorder as _obs
 from ..robust import audit as _audit
 from .compat import pvary, shard_map
 from .coo import COO, SENTINEL
@@ -458,11 +459,22 @@ def _compress_operand(mat, sr, site, resid=None):
     feedback (exactly val+resid − dequantized).
     """
     q8, scale, new_resid = quantize_payload(mat.val, mat.nnz, resid)
+    if _obs.recording():
+        # comm-volume tier: value-payload bytes before/after quantization
+        # (the int8 wire adds one scale scalar per tile)
+        import numpy as np
+        live = int(np.sum(np.asarray(mat.nnz)))
+        _obs.counter_add("dist.compress.bytes_in",
+                         live * mat.val.dtype.itemsize)
+        _obs.counter_add("dist.compress.bytes_out",
+                         live * q8.dtype.itemsize
+                         + scale.size * scale.dtype.itemsize)
     mat = dataclasses.replace(mat, val=q8)
     mat = _audit.guard_exchange(site, mat)
     return mat, scale, new_resid
 
 
+@_obs.timed("spgemm2d")
 def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
               mesh: Mesh, prod_cap: int, out_cap: int,
               variant: str = "rotation", merge: str = "deferred",
@@ -506,9 +518,11 @@ def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
             raise ValueError(
                 "compressed exchange needs an additive identity of 0 "
                 "(padding must survive the int8 round trip)")
-        a, a_scale, new_resid = _compress_operand(
-            a, sr, "dist.compressed_exchange", ef_resid)
-        b, b_scale, _ = _compress_operand(b, sr, "dist.compressed_exchange")
+        with _obs.span("spgemm2d.compress"):
+            a, a_scale, new_resid = _compress_operand(
+                a, sr, "dist.compressed_exchange", ef_resid)
+            b, b_scale, _ = _compress_operand(
+                b, sr, "dist.compressed_exchange")
     mm = mask.mat if mask is not None else None
     val_pred = mask.val_pred if mask is not None else None
     if mask is not None and (mask.mat3 is not None or mask.vec is not None):
@@ -545,7 +559,14 @@ def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
     out_specs = (P("row", "col", None), P("row", "col", None),
                  P("row", "col", None), P("row", "col"), P("row", "col"))
     f = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-    row, col, val, nnz, ok = f(*args)
+    # the SUMMA stage loop itself is traced (inside shard_map) — the host
+    # span brackets the whole dispatch, blocking when recording so the
+    # span covers device execution, not just async dispatch
+    with _obs.span("spgemm2d.execute", q=q, variant=variant, merge=merge,
+                   schedule=sched if isinstance(sched, str) else "hybrid",
+                   overlap=overlap, compress=compress or "none"):
+        row, col, val, nnz, ok = f(*args)
+        _obs.sync((row, col, val, nnz, ok))
     # every merge path ends in dedup(order='row'), so C keeps the invariant
     cmat = DistSpMat(row, col, val, nnz, (a.shape[0], b.shape[1]), a.grid,
                      order="row")
@@ -555,6 +576,7 @@ def spgemm_2d(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC, *,
     return cmat, ok
 
 
+@_obs.timed("spgemm3d")
 def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
               mesh: Mesh, prod_cap: int, out_cap: int,
               merge: str = "deferred", variant: str = "rotation",
@@ -720,7 +742,10 @@ def spgemm_3d(a3: DistSpMat3D, b3: DistSpMat3D, sr: Semiring = ARITHMETIC, *,
                  P("layer", "row", "col", None),
                  P("layer", "row", "col"), P("layer", "row", "col"))
     f = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-    row, col, val, nnz, ok = f(*args)
+    with _obs.span("spgemm3d.execute", L=L, q=q, variant=variant,
+                   merge=merge, overlap=overlap):
+        row, col, val, nnz, ok = f(*args)
+        _obs.sync((row, col, val, nnz, ok))
     c3 = DistSpMat3D(row, col, val, nnz, c_shape, a3.grid, "csub",
                      order="row")  # final inter-layer merge is a row dedup
     _audit.audit_obj(c3, "spgemm3d.out", min_level=_audit.FULL)
@@ -749,17 +774,20 @@ def spgemm_2d_batched(a: DistSpMat, b: DistSpMat, sr: Semiring = ARITHMETIC,
     resid = jnp.zeros_like(a.val) if compress is not None else None
     outs = []
     for t in range(nbatch):
-        bt = _restrict_cols(b, t * slab, slab)
-        if compress is not None:
-            c, ok, resid = spgemm_2d(
-                a, bt, sr, mesh=mesh, prod_cap=prod_cap, out_cap=out_cap,
-                variant=variant, mask=mask, schedule=schedule,
-                overlap=overlap, compress=compress, ef_resid=resid)
-        else:
-            c, ok = spgemm_2d(a, bt, sr, mesh=mesh, prod_cap=prod_cap,
-                              out_cap=out_cap, variant=variant, mask=mask,
-                              schedule=schedule, overlap=overlap)
-        outs.append((c, ok))
+        with _obs.span("spgemm2d.batch", batch=t, nbatch=nbatch):
+            bt = _restrict_cols(b, t * slab, slab)
+            if compress is not None:
+                c, ok, resid = spgemm_2d(
+                    a, bt, sr, mesh=mesh, prod_cap=prod_cap,
+                    out_cap=out_cap, variant=variant, mask=mask,
+                    schedule=schedule, overlap=overlap, compress=compress,
+                    ef_resid=resid)
+            else:
+                c, ok = spgemm_2d(a, bt, sr, mesh=mesh, prod_cap=prod_cap,
+                                  out_cap=out_cap, variant=variant,
+                                  mask=mask, schedule=schedule,
+                                  overlap=overlap)
+            outs.append((c, ok))
     return outs
 
 

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..obs import recorder as _obs
 from ..robust import audit as _audit
 from .compat import shard_map
 from .coo import COO, SENTINEL
@@ -54,6 +55,7 @@ def transpose_layout(v: DistVec, *, mesh: Mesh) -> DistVec:
     return DistVec(out, v.n, v.grid, new_layout)
 
 
+@_obs.timed("spmv")
 def spmv(a: DistSpMat, x: DistVec, sr: Semiring = ARITHMETIC, *,
          mesh: Mesh, variant: str = "row") -> DistVec:
     """y = A x. x must be layout 'col'; result is layout 'row'."""
@@ -92,6 +94,7 @@ def spmv_iter(a: DistSpMat, x: DistVec, sr: Semiring = ARITHMETIC, *,
                             mesh=mesh)
 
 
+@_obs.timed("spmspv")
 def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring = ARITHMETIC, *,
            mesh: Mesh, variant: str = "sort", merge: str = "sparse",
            prod_cap: int, out_cap: int, mask=None):
@@ -206,8 +209,10 @@ def spmspv(a: DistSpMat, x: DistSpVec, sr: Semiring = ARITHMETIC, *,
     if mv is not None:
         in_specs = in_specs + (P("row", "col", None),)
         args = args + (mv.data,)
-    yi, yv, yn, ok = shard_map(
-        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)(*args)
+    with _obs.span("spmspv.execute", variant=variant, merge=merge):
+        yi, yv, yn, ok = shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)(*args)
+        _obs.sync((yi, yv, yn, ok))
     y = DistSpVec(yi, yv, yn, a.shape[0], a.grid, "row")
     _audit.audit_obj(y, "spmspv.out", min_level=_audit.FULL)
     return y, ok

@@ -12,6 +12,7 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from ..obs import recorder as _obs
 from ..robust import faults as _faults
 
 MAGIC = 0x434242494F31      # "CBBIO1"
@@ -20,6 +21,7 @@ _CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
 _HDR_BYTES = 48             # 6 × int64
 
 
+@_obs.timed("io.write_bin")
 def write_binary(path: str, shape, rows, cols, vals, nwriters: int = 4):
     m, n = shape
     nnz = len(rows)
@@ -46,14 +48,17 @@ def write_binary(path: str, shape, rows, cols, vals, nwriters: int = 4):
     with ThreadPoolExecutor(nwriters) as ex:
         list(ex.map(put, range(nwriters)))
     mm.flush()
+    _obs.counter_add("io.bytes_written", os.path.getsize(path))
     _faults.corrupt_file("io.bin_body", path)
 
 
+@_obs.timed("io.read_bin")
 def read_binary(path: str, nreaders: int = 4):
     """Read a CBBIO1 file; malformed/truncated input raises ValueError
     naming the file and byte offset — never an IndexError, KeyError, or a
     memmap crash on garbage sizes."""
     fsize = os.path.getsize(path)
+    _obs.counter_add("io.bytes_read", fsize)
     if fsize < _HDR_BYTES:
         raise ValueError(f"{path}: truncated header — file is {fsize} bytes, "
                          f"need {_HDR_BYTES} (offset 0)")

@@ -30,6 +30,8 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from ..obs import recorder as _obs
+
 
 def _hash_label(label: bytes, space: int = 2**61 - 1) -> int:
     return int.from_bytes(hashlib.blake2b(label, digest_size=8).digest(),
@@ -57,8 +59,10 @@ def _read_lines(path, start, end):
     return [ln for ln in buf.split(b"\n") if ln.strip()]
 
 
+@_obs.timed("io.read_tuples")
 def read_generalized_tuples(path: str, nworkers: int = 4, weighted=None):
     """Two-pass parallel label-format reader. See module docstring."""
+    _obs.counter_add("io.bytes_read", os.path.getsize(path))
     ranges = _byte_ranges(path, nworkers)
 
     # ---------------- pass 1: label discovery -------------------------

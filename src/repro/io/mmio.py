@@ -17,6 +17,7 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from ..obs import recorder as _obs
 from ..robust import faults as _faults
 
 
@@ -101,10 +102,12 @@ def _read_chunk(path, start, end, body0, pattern):
                        path=path, offset=pos)
 
 
+@_obs.timed("io.read_mm")
 def read_mm_parallel(path: str, nreaders: int = 4):
     """Parallel MatrixMarket read → (shape, rows, cols, vals) int64 global."""
     hdr = read_mm_header(path)
     size = os.path.getsize(path)
+    _obs.counter_add("io.bytes_read", size)
     body0 = hdr["body_offset"]
     pattern = hdr["field"] == "pattern"
     bounds = [body0 + (size - body0) * i // nreaders
@@ -136,6 +139,7 @@ def read_mm_parallel(path: str, nreaders: int = 4):
     return (hdr["m"], hdr["n"]), rows, cols, vals
 
 
+@_obs.timed("io.write_mm")
 def write_mm_parallel(path: str, shape, rows, cols, vals, nwriters: int = 4,
                       field: str = "real"):
     """Parallel MatrixMarket write (precomputed-offset collective pattern)."""
@@ -171,3 +175,4 @@ def write_mm_parallel(path: str, shape, rows, cols, vals, nwriters: int = 4,
 
     with ThreadPoolExecutor(nwriters) as ex:
         list(ex.map(put, range(nwriters)))
+    _obs.counter_add("io.bytes_written", os.path.getsize(path))

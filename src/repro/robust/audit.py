@@ -33,6 +33,7 @@ import zlib
 
 import numpy as np
 
+from ..obs import recorder as _obs
 from .faults import SENTINEL
 
 OFF, BOUNDARY, FULL = 0, 1, 2
@@ -203,6 +204,28 @@ def checksum_obj(obj) -> int:
     return crc
 
 
+def payload_nbytes(obj) -> int:
+    """Live wire-payload bytes of a container: Σnnz × per-entry bytes.
+
+    Index dtypes + the value payload (including trailing vdims) per live
+    entry — the volume a real wire would move, and the quantity the
+    ``comm.bytes.*`` / ``dist.compress.bytes_*`` obs counters accumulate.
+    Deterministic (derives only from nnz and dtypes), cheap (one host
+    transfer of the nnz array, nothing else).
+    """
+    n = int(np.sum(np.asarray(obj.nnz)))
+    if hasattr(obj, "idx"):                      # DistSpVec
+        base_ndim = obj.idx.ndim
+        per = obj.idx.dtype.itemsize
+    else:                                        # DistSpMat / DistSpMat3D
+        base_ndim = obj.row.ndim
+        per = obj.row.dtype.itemsize + obj.col.dtype.itemsize
+    vper = obj.val.dtype.itemsize
+    for d in obj.val.shape[base_ndim:]:
+        vper *= d
+    return n * (per + vper)
+
+
 def guard_exchange(site: str, obj):
     """Bracket one simulated communication stage.
 
@@ -223,16 +246,33 @@ def guard_exchange(site: str, obj):
     from . import deadline, faults
     f_on = faults.enabled()
     lvl = level()
-    if not f_on and lvl < BOUNDARY and not deadline.enabled():
+    obs_on = _obs.recording()
+    if not f_on and lvl < BOUNDARY and not deadline.enabled() \
+            and not obs_on:
         return obj
-    with deadline.watch(site):
-        pre = checksum_obj(obj) if lvl >= BOUNDARY else None
-        if f_on:
-            obj = faults.corrupt_obj(site, obj)
-        if pre is not None:
-            post = checksum_obj(obj)
-            if post != pre:
-                raise AuditError(
-                    f"{site}: packed-key/value checksum mismatch across "
-                    f"exchange ({pre:#010x} -> {post:#010x})", site)
+    if obs_on:
+        # the flight recorder's comm-volume tier: live payload bytes at
+        # every guarded boundary, under a per-site span (DESIGN.md §9)
+        _obs.counter_add("comm.bytes." + site, payload_nbytes(obj))
+    with _obs.span(site):
+        try:
+            with deadline.watch(site):
+                pre = checksum_obj(obj) if lvl >= BOUNDARY else None
+                if f_on:
+                    obj = faults.corrupt_obj(site, obj)
+                if pre is not None:
+                    post = checksum_obj(obj)
+                    if post != pre:
+                        raise AuditError(
+                            f"{site}: packed-key/value checksum mismatch "
+                            f"across exchange ({pre:#010x} -> {post:#010x})",
+                            site)
+        except AuditError as err:
+            # deadline.watch already evented its own trips; only plain
+            # checksum/invariant failures are counted here
+            from .deadline import ExchangeTimeout
+            if not isinstance(err, ExchangeTimeout):
+                _obs.event("audit.failure", site=site, error=str(err))
+                _obs.counter_add("audit.failures")
+            raise
     return obj

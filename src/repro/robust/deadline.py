@@ -44,6 +44,7 @@ from collections import deque
 
 import numpy as np
 
+from ..obs import recorder as _obs
 from . import faults
 from .audit import AuditError
 
@@ -100,6 +101,7 @@ class ExchangeGuard:
         self.backoff_cap = backoff_cap
         self.max_retries = max_retries
         self._times: dict[str, deque] = {}
+        self._trips: dict[str, int] = {}
 
     def budget(self, site: str) -> float:
         """Current wall-time budget for one exchange at ``site``."""
@@ -115,13 +117,36 @@ class ExchangeGuard:
     def samples(self, site: str) -> int:
         return len(self._times.get(site, ()))
 
+    def trips(self, site: str) -> int:
+        """Deadline trips recorded at ``site`` (survives :meth:`reset`)."""
+        return self._trips.get(site, 0)
+
+    def sites(self) -> list[str]:
+        """Every site with recorded samples or trips (sorted)."""
+        return sorted(set(self._times) | set(self._trips))
+
+    def stats(self, site: str) -> dict:
+        """Public window state: ``{n, median_s, budget_s, trips}``.
+
+        The supported way to inspect a site's timing model (obs.snapshot
+        embeds this per site) — callers must not reach into ``_times``.
+        ``median_s`` is None during warmup (fewer than one sample).
+        """
+        ts = self._times.get(site)
+        n = len(ts) if ts else 0
+        med = float(sorted(ts)[n // 2]) if n else None
+        return {"n": n, "median_s": med,
+                "budget_s": float(self.budget(site)),
+                "trips": self.trips(site)}
+
     def reset(self, site: str | None = None):
         """Forget trailing times — for all sites or one.
 
         Called after a topology change or a schedule-ladder descent: the
         new configuration's exchanges have different timing, so budgets
         learned from the old one would either mask a regression or trip
-        spuriously.
+        spuriously. Trip counts are diagnostics, not a timing model — they
+        deliberately survive the reset.
         """
         if site is None:
             self._times.clear()
@@ -143,6 +168,9 @@ class ExchangeGuard:
         dt = time.monotonic() - t0
         b = self.budget(site)
         if dt > b:
+            self._trips[site] = self._trips.get(site, 0) + 1
+            _obs.event("deadline.trip", site=site, elapsed_s=dt, budget_s=b)
+            _obs.counter_add("deadline.trips")
             raise ExchangeTimeout(site, dt, b)
         self.record(site, dt)
 
@@ -234,12 +262,32 @@ def reset(site: str | None = None):
         g.reset(site)
 
 
+def stats(site: str) -> dict:
+    """Module-level :meth:`ExchangeGuard.stats` on the active guard.
+
+    ``{n: 0, median_s: None, budget_s: None, trips: 0}`` when deadline
+    enforcement is off — callers never touch guard internals.
+    """
+    g = _default_guard()
+    if g is None:
+        return {"n": 0, "median_s": None, "budget_s": None, "trips": 0}
+    return g.stats(site)
+
+
+def sites() -> list[str]:
+    """Sites the active guard has state for (empty when off)."""
+    g = _default_guard()
+    return g.sites() if g is not None else []
+
+
 def backoff_sleep(site: str, attempt: int):
     """Warn + sleep the deterministic backoff before retry ``attempt``."""
     g = _default_guard()
     if g is None:
         return
     d = g.backoff_delay(site, attempt)
+    _obs.event("deadline.backoff", site=site, attempt=attempt, delay_s=d)
+    _obs.counter_add("deadline.backoffs")
     warnings.warn(
         f"robust: exchange deadline at {site} — backing off {d * 1e3:.1f}ms "
         f"before retry {attempt}", RuntimeWarning, stacklevel=3)

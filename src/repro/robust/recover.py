@@ -47,6 +47,7 @@ import warnings
 
 import numpy as np
 
+from ..obs import recorder as _obs
 from . import faults
 from .deadline import TopologyError, maybe_device_loss
 
@@ -113,6 +114,12 @@ def apply_rung(rung: str, plan):
         f"(after {getattr(plan, 'attempts', '?')} attempts; "
         f"ladder so far: {getattr(plan, 'degraded', ())})",
         RuntimeWarning, stacklevel=3)
+    # mirror the warning into the flight recorder so a REPRO_TRACE capture
+    # is self-contained — shed detail must not live only on stderr
+    _obs.event("ladder.rung", rung=rung,
+               attempts=getattr(plan, "attempts", None),
+               prior=",".join(getattr(plan, "degraded", ())))
+    _obs.counter_add("ladder.rungs")
     kw = dict(degraded=tuple(getattr(plan, "degraded", ())) + (rung,))
     if rung == "serial-schedule":
         # record WHICH schedule configuration was abandoned (bugfix: merge
@@ -223,7 +230,10 @@ class CheckpointedLoop:
     def __init__(self, ckpt_dir: str | None = None, *, every: int = 1,
                  keep: int = 3, watchdog=None, on_topology=None,
                  max_topology_events: int = 2, on_straggler=None,
-                 straggler_patience: int = 3):
+                 straggler_patience: int = 3, name: str = "loop"):
+        # ``name`` labels this loop's obs span site (``<name>.iter``) so
+        # per-app iteration timings separate in trace_summary
+        self.name = name
         self.ckpt_dir = ckpt_dir
         self.every = max(int(every), 1)
         self.keep = keep
@@ -266,7 +276,8 @@ class CheckpointedLoop:
                 if wd is not None:
                     wd.start()
                 faults.maybe_delay("loop.delay")
-                state, done = body(it, state)
+                with _obs.span(self.name + ".iter", it=it):
+                    state, done = body(it, state)
             except TopologyError as err:
                 # `state` is the last COMPLETED iteration's output — save
                 # it (step it-1) so a restarted process resumes by redoing
@@ -282,6 +293,9 @@ class CheckpointedLoop:
                     f"checkpointed, regridding via on_topology "
                     f"({topo_events}/{self.max_topology_events})",
                     RuntimeWarning, stacklevel=2)
+                _obs.event("loop.topology", loop=self.name, it=it,
+                           error=str(err), n=topo_events)
+                _obs.counter_add("loop.topology_events")
                 state = self.on_topology(state, err)
                 if wd is not None:
                     wd.reset()              # old-grid step times are stale
@@ -293,6 +307,9 @@ class CheckpointedLoop:
                         f"robust: iteration {it} straggling "
                         f"({dt:.3f}s > budget {wd.budget():.3f}s)",
                         RuntimeWarning, stacklevel=2)
+                    _obs.event("loop.straggler", loop=self.name, it=it,
+                               elapsed_s=dt, budget_s=wd.budget())
+                    _obs.counter_add("loop.stragglers")
                     straggles += 1
                     if self.on_straggler is not None \
                             and straggles >= self.straggler_patience:

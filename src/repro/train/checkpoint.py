@@ -36,6 +36,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from ..obs import recorder as _obs
 from ..robust import faults as _faults
 
 
@@ -55,6 +56,7 @@ def _leaf_crc(arr: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
+@_obs.timed("ckpt.save")
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3):
     os.makedirs(ckpt_dir, exist_ok=True)
     name = f"step_{step:08d}"
@@ -75,6 +77,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3):
                                        shape=list(arr.shape),
                                        dtype=str(arr.dtype),
                                        crc32=_leaf_crc(arr)))
+        _obs.counter_add("ckpt.bytes_saved", arr.nbytes)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
@@ -126,6 +129,7 @@ def _load_leaf(step_dir: str, entry: dict) -> np.ndarray:
         raise CheckpointError(
             f"checkpoint leaf {where} CRC32 mismatch "
             f"({_leaf_crc(arr):#010x} != manifest {entry['crc32']:#010x})")
+    _obs.counter_add("ckpt.bytes_restored", arr.nbytes)
     return arr
 
 
@@ -139,6 +143,7 @@ def _candidate_steps(ckpt_dir: str, step: int | None):
     return steps
 
 
+@_obs.timed("ckpt.restore")
 def restore_checkpoint(ckpt_dir: str, like: Any, *, step: int | None = None,
                        mesh=None, specs: Any = None):
     """Restore into the structure of ``like`` (a pytree of arrays or
@@ -184,6 +189,7 @@ def _restore_one(ckpt_dir: str, step: int, like, mesh, specs):
     return jax.tree.unflatten(treedef, out_leaves)
 
 
+@_obs.timed("ckpt.restore_flat")
 def restore_flat(ckpt_dir: str, step: int | None = None):
     """Manifest-driven restore: ``({leaf_path: np.ndarray}, step)``.
 

@@ -1,0 +1,45 @@
+"""Counter-determinism scenario: one seeded distributed workload under the
+flight recorder, counters printed as JSON on the last stdout line.
+
+Run twice by tests/test_obs.py (subprocess, REPRO_DEVICES forced host
+devices) — byte counters, retry counts, and event counts must be
+IDENTICAL across runs: they derive only from data sizes and control-flow
+decisions, never from timing (recorder design rule 3).
+"""
+import json
+import os
+import sys
+
+N_DEV = int(os.environ.get("REPRO_DEVICES", "4"))
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={N_DEV}")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np                                             # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import obs                                          # noqa: E402
+from repro.core import ARITHMETIC, DistSpMat, make_grid       # noqa: E402
+from repro.core.plan import spgemm as spgemm_planned          # noqa: E402
+
+
+def main():
+    obs.enable()
+    mesh = make_grid(2, 2)
+    rng = np.random.default_rng(7)
+    n, nnz = 128, 900
+    r = rng.integers(0, n, nnz).astype(np.int64)
+    c = rng.integers(0, n, nnz).astype(np.int64)
+    v = rng.random(nnz).astype(np.float32)
+    A = DistSpMat.from_global_coo((n, n), r, c, v, (2, 2), mesh=mesh)
+    spgemm_planned(A, A, ARITHMETIC, mesh=mesh)
+    spgemm_planned(A, A, ARITHMETIC, mesh=mesh, compress="int8")
+    snap = obs.snapshot()
+    out = dict(snap["counters"])
+    out["__events__"] = snap["events"]
+    print(json.dumps(out, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()
